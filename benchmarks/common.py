@@ -1,0 +1,70 @@
+"""Shared benchmark runners for the paper-reproduction suite.
+
+Protocols (see DESIGN.md §7 and EXPERIMENTS.md):
+  P1 "iteration"  — T server iterations for every algorithm (paper Fig. 2 axis)
+  P2 "comms"      — equal total client→server communications (paper App. E's
+                    fair metric: buffered methods get T/M updates)
+Learning rates are tuned per algorithm over c·√(n/T) grids, as in App. F.4.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
+                                    DelayAdaptiveASGD, FedBuff, VanillaASGD)
+from repro.core.staleness_sim import StalenessSimulator
+
+C_GRID_UNBUF = (0.1, 0.2, 0.5)
+C_GRID_BUF = (0.5, 1.0, 2.0)
+
+
+def algo_suite(beta: float, M: int = 10, tau_algo: Optional[int] = None,
+               cache_dtype: str = "float32"):
+    tau = tau_algo if tau_algo is not None else int(2 * beta)
+    return [
+        ("ace", lambda: ACEIncremental(cache_dtype=cache_dtype), 1, C_GRID_UNBUF),
+        ("aced", lambda: ACED(tau_algo=tau, cache_dtype=cache_dtype), 1,
+         C_GRID_UNBUF),
+        ("ca2fl", lambda: CA2FL(buffer_size=M), M, C_GRID_BUF),
+        ("fedbuff", lambda: FedBuff(buffer_size=M), M, C_GRID_BUF),
+        ("delay_asgd", lambda: DelayAdaptiveASGD(tau_c=2 * beta), 1,
+         C_GRID_UNBUF),
+        ("asgd", lambda: VanillaASGD(), 1, C_GRID_UNBUF),
+    ]
+
+
+def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
+             seeds=(1,), dropout_frac=0.0, dropout_at=None,
+             speed_skew=0.0, eval_every=None) -> Dict:
+    accs, walls = [], []
+    for seed in seeds:
+        sim = StalenessSimulator(
+            grad_fn=task.grad_fn, params0=task.params0,
+            aggregator=agg_factory(), n_clients=task.n_clients,
+            server_lr=lr, beta=beta, speed_skew=speed_skew,
+            eval_fn=task.eval_fn, eval_every=eval_every or T,
+            dropout_frac=dropout_frac, dropout_at=dropout_at, seed=seed)
+        t0 = time.time()
+        r = sim.run(T)
+        walls.append((time.time() - t0) / max(len(r.losses), 1))
+        accs.append(r.final_eval().get("accuracy",
+                                       -r.final_eval().get("dist", 0.0)))
+    return {"acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
+            "us_per_iter": float(np.mean(walls)) * 1e6,
+            "comms": r.total_comms}
+
+
+def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
+          protocol="comms", T_iter=None, **kw) -> Dict:
+    """Tune c over the grid, report the best final metric."""
+    T = (comm_budget // M) if protocol == "comms" else (T_iter or comm_budget)
+    best = None
+    for c in c_grid:
+        lr = c * np.sqrt(n / T)
+        r = run_algo(task, factory, T=T, beta=beta, lr=lr, seeds=seeds, **kw)
+        if best is None or r["acc_mean"] > best["acc_mean"]:
+            best = {**r, "c": c, "T": T, "name": name}
+    return best

@@ -1,0 +1,69 @@
+"""Server-aggregation kernel microbenchmarks: jit'd XLA implementation timed
+on CPU (wall), Pallas path validated in interpret mode; derived column =
+effective GB/s of the memory-bound op."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def main(fast=True):
+    rows = []
+    n, d = 16, (1 << 20 if fast else 1 << 22)
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=d), jnp.float32)
+    u = jnp.zeros(d, jnp.float32)
+    rows_f = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q, s = ops.quantize_rows(rows_f, backend="xla")
+    mask = jnp.asarray(rng.random(n) > 0.3)
+    nsc = ref.row_scale(g)
+
+    cu = jax.jit(lambda u_, g_, c, os_, ns: ops.cache_row_update(
+        u_, g_, c, os_, ns, 1.0 / n, backend="xla"))
+    t = _time(cu, u, g, q[0], s[0], nsc)
+    moved = d * (4 + 4 + 1 + 4 + 1)  # read u,g,row; write u,row
+    rows.append({"name": "cache_row_update_xla_1M", "us_per_call": t * 1e6,
+                 "derived": f"{moved/t/1e9:.2f}GB/s"})
+
+    ma = jax.jit(lambda c, s_, m: ops.masked_agg(c, s_, m, backend="xla"))
+    t = _time(ma, q, s, mask)
+    rows.append({"name": f"masked_agg_xla_{n}x1M", "us_per_call": t * 1e6,
+                 "derived": f"{n*d/t/1e9:.2f}GB/s"})
+
+    qz = jax.jit(lambda x: ops.quantize_rows(x, backend="xla"))
+    t = _time(qz, rows_f)
+    rows.append({"name": f"quantize_rows_xla_{n}x1M", "us_per_call": t * 1e6,
+                 "derived": f"{n*d*5/t/1e9:.2f}GB/s"})
+
+    # pallas interpret correctness spot (not a timing: interpreter is python)
+    d2 = 8192
+    a1, b1 = ops.cache_row_update(u[:d2], g[:d2], q[0, :d2], s[0], nsc,
+                                  1.0 / n, backend="interpret")
+    a2, b2 = ref.cache_row_update_ref(u[:d2], g[:d2], q[0, :d2], s[0], nsc,
+                                      1.0 / n)
+    ok = bool(jnp.allclose(a1, a2, atol=1e-5) and jnp.array_equal(b1, b2))
+    rows.append({"name": "pallas_interpret_allclose", "us_per_call": 0,
+                 "derived": "pass" if ok else "FAIL"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(json.dumps(row))

@@ -1,0 +1,89 @@
+"""§Perf hillclimb driver: compile controlled variants of one (arch × shape)
+pair and record the three roofline terms per variant.
+
+Variants (each is one hypothesis in EXPERIMENTS.md §Perf):
+  paper_direct   ACE Alg. 1 direct aggregation (paper-faithful conceptual baseline)
+  paper_inc      ACE Alg. a.5 incremental rule (paper's own O(d) optimization)
+  paper_int8     + App. F.3.3 int8 cache (paper's own memory optimization)
+  no_attn_shard  beyond-paper: drop the intra-attention sharding constraint
+                 (removes SPMD involuntary-remat resharding)
+  tp_params      beyond-paper: pure tensor-parallel params (no FSDP) —
+                 trades HBM for all-gather removal (small archs only)
+  remat_dots     beyond-paper: checkpoint policy dots_saveable (compute ↓,
+                 memory ↑)
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb --arch gemma2-2b \
+      --shape train_4k --variants paper_inc,no_attn_shard --out results/perf.jsonl
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+
+VARIANTS = {
+    "paper_direct": dict(algo="ace_direct"),
+    "paper_inc": dict(algo="ace"),
+    "paper_int8": dict(algo="ace", cache_dtype="int8"),
+    "no_attn_shard": dict(algo="ace", cache_dtype="int8",
+                          rules={"heads": None, "batch": None, "seq": None}),
+    "tp_params": dict(algo="ace", cache_dtype="int8", fsdp=False),
+    "remat_dots": dict(algo="ace", cache_dtype="int8", remat="dots"),
+    "remat_dots_noshard": dict(algo="ace", cache_dtype="int8", remat="dots",
+                               rules={"heads": None, "batch": None,
+                                      "seq": None}),
+    # beyond-paper: bf16 activation all-reduces (norm upcast keeps the TP
+    # partial-sum reduce in f32 otherwise — see layers.LOWP_NORM)
+    "lowp_norm": dict(algo="ace", cache_dtype="int8", remat="dots",
+                      setup="lowp_norm"),
+}
+
+
+def _apply_setup(name):
+    if name == "lowp_norm":
+        import repro.models.layers as L
+        L.LOWP_NORM = True
+
+
+def main():
+    from repro.launch.dryrun import run_one
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="paper_direct,paper_inc,paper_int8")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default="results/perf.jsonl")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for v in args.variants.split(","):
+            kw = dict(VARIANTS[v.strip()])
+            setup = kw.pop("setup", None)
+            if setup:
+                _apply_setup(setup)
+            t0 = time.time()
+            try:
+                rec = run_one(args.arch, args.shape, variant=v,
+                              probes=not args.no_probes, **kw)
+            except Exception as e:
+                rec = {"arch": args.arch, "shape": args.shape, "variant": v,
+                       "error": f"{type(e).__name__}: {e}"}
+            rec["wall_s"] = round(time.time() - t0, 1)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            if rec.get("error"):
+                print(f"[FAIL] {v}: {rec['error'][:200]}", flush=True)
+            else:
+                print(f"[OK] {v}: t_comp={rec['t_compute']:.3f} "
+                      f"t_mem={rec['t_memory']:.3f} "
+                      f"t_coll={rec['t_collective']:.3f} "
+                      f"({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

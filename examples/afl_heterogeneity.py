@@ -1,0 +1,41 @@
+"""Scenario: heterogeneity amplification and why all-client engagement fixes it.
+
+Reproduces the paper's central mechanism on the theory-exact quadratic
+testbed: client optima spread zeta (heterogeneity), staleness tau ~ Exp(beta).
+Partial-participation baselines' error floors scale with zeta; ACE's floor is
+zeta-invariant (Theorem 1 needs no bounded-heterogeneity assumption).
+
+Run:  PYTHONPATH=src python examples/afl_heterogeneity.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregators import (ACEIncremental, FedBuff, VanillaASGD)
+from repro.core.staleness_sim import StalenessSimulator
+
+n, d, sigma, T, lr = 40, 30, 0.3, 600, 0.02
+rng = np.random.default_rng(0)
+dirs = rng.normal(size=(n, d))
+dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+
+print(f"{'algo':10s} {'zeta':>5s} {'beta':>5s} {'steady-state error':>20s}")
+for name, mk in [("ace", lambda: ACEIncremental()),
+                 ("fedbuff", lambda: FedBuff(buffer_size=5)),
+                 ("asgd", lambda: VanillaASGD())]:
+    for zeta in (0.5, 4.0):
+        for beta in (2, 20):
+            C = jnp.asarray(dirs * zeta)
+            w_star = np.asarray(C.mean(0))
+
+            def grad_fn(params, client, key):
+                return 0.0, (params - C[client]
+                             + sigma * jax.random.normal(key, (d,)))
+
+            sim = StalenessSimulator(
+                grad_fn=grad_fn, params0=jnp.asarray(w_star) + 1.0,
+                aggregator=mk(), n_clients=n, server_lr=lr, beta=beta, seed=2)
+            sim.run(T)
+            err = float(np.sum((np.asarray(sim.w) - w_star) ** 2))
+            print(f"{name:10s} {zeta:5.1f} {beta:5.0f} {err:20.4f}")
+    print()

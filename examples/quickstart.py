@@ -1,0 +1,30 @@
+"""Quickstart: ACE (All-Client Engagement AFL) in ~40 lines.
+
+Simulates 20 clients with non-IID data and exponential delays; the server
+updates the global model on every arrival using the ACE incremental rule
+(paper Alg. a.5), then compares against Vanilla ASGD.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.aggregators import ACEIncremental, VanillaASGD
+from repro.core.fl_tasks import make_vision_task
+from repro.core.staleness_sim import StalenessSimulator
+
+N_CLIENTS, T, BETA = 20, 300, 5.0
+
+task = make_vision_task(n_clients=N_CLIENTS, alpha=0.1, n_train=4000,
+                        n_test=1000, dim=32, hidden=(64,), batch=10, seed=0)
+lr = 0.2 * np.sqrt(N_CLIENTS / T)
+
+for name, agg in [("ACE", ACEIncremental(cache_dtype="int8")),
+                  ("Vanilla ASGD", VanillaASGD())]:
+    sim = StalenessSimulator(
+        grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+        n_clients=N_CLIENTS, server_lr=lr, beta=BETA,
+        eval_fn=task.eval_fn, eval_every=100, seed=1)
+    result = sim.run(T)
+    accs = " -> ".join(f"{e['accuracy']:.3f}" for e in result.evals)
+    print(f"{name:13s} accuracy over training: {accs} "
+          f"({result.total_comms} client uploads)")

@@ -1,0 +1,12 @@
+"""Serving scenario: batched prefill+decode for three architecture families
+(dense GQA / MLA / SSM) through the same serve_step API the decode dry-run
+shapes lower.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main as serve_main
+
+for arch in ("gemma2-2b", "minicpm3-4b", "mamba2-780m"):
+    print(f"=== {arch} (reduced) ===")
+    serve_main(["--arch", arch, "--reduced", "--batch", "2",
+                "--prompt-len", "16", "--gen", "16"])

@@ -1,0 +1,64 @@
+"""Pytree checkpointing: npz payload + json treedef, sharding-aware
+(device arrays are host-gathered before save). Covers params, optimizer
+state, and the ACE server cache (so an AFL run resumes with its staleness
+registers intact)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *, prefix="ckpt",
+                    keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{prefix}_{step:08d}.npz")
+    flat = _flatten_with_paths(tree)
+    np.savez(path, **flat)
+    # structure file for restore
+    struct = jax.tree.map(lambda x: None, tree)
+    with open(os.path.join(directory, f"{prefix}_structure.json"), "w") as f:
+        json.dump(jax.tree_util.tree_structure(struct).__repr__(), f)
+    # rotate
+    ckpts = sorted(p for p in os.listdir(directory)
+                   if p.startswith(prefix + "_") and p.endswith(".npz"))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(directory, old))
+    return path
+
+
+def latest_step(directory: str, prefix="ckpt") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for p in os.listdir(directory)
+             if (m := re.match(rf"{prefix}_(\d+)\.npz$", p))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target: Any, *,
+                       prefix="ckpt") -> Any:
+    """Restore into the structure of `target` (shape/dtype donor)."""
+    path = os.path.join(directory, f"{prefix}_{step:08d}.npz")
+    data = np.load(path)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(target)[0]
+    treedef = jax.tree_util.tree_structure(target)
+    new_leaves = []
+    for p, leaf in leaves_with_paths:
+        key = "/".join(str(x) for x in p)
+        arr = data[key]
+        assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape, np.shape(leaf))
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,2 @@
+from repro.configs.base import (AFLConfig, INPUT_SHAPES, InputShape,
+                                ModelConfig)

@@ -1,0 +1,137 @@
+"""Architecture registry: --arch lookup, per-shape input specs
+(ShapeDtypeStruct stand-ins, zero allocation), shape-support rules, and
+per-arch AFL server sizing (client count / cache dtype chosen so the O(nd)
+cache fits the production pod — see DESIGN.md §3)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (arctic_480b, gemma2_2b, llama3_405b, mamba2_780m,
+                           minicpm3_4b, qwen2_vl_7b, qwen3_moe_235b_a22b,
+                           seamless_m4t_medium, yi_9b, zamba2_1p2b)
+from repro.configs.base import (INPUT_SHAPES, AFLConfig, InputShape,
+                                ModelConfig)
+
+ARCHS: Dict[str, ModelConfig] = {
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b.CONFIG,
+    "yi-9b": yi_9b.CONFIG,
+    "gemma2-2b": gemma2_2b.CONFIG,
+    "qwen2-vl-7b": qwen2_vl_7b.CONFIG,
+    "seamless-m4t-medium": seamless_m4t_medium.CONFIG,
+    "minicpm3-4b": minicpm3_4b.CONFIG,
+    "arctic-480b": arctic_480b.CONFIG,
+    "mamba2-780m": mamba2_780m.CONFIG,
+    "zamba2-1.2b": zamba2_1p2b.CONFIG,
+    "llama3-405b": llama3_405b.CONFIG,
+}
+
+# Which archs run long_500k (sub-quadratic requirement; see DESIGN.md table).
+LONG_CONTEXT_OK = {"mamba2-780m", "zamba2-1.2b", "gemma2-2b"}
+
+# Per-arch AFL server sizing: the ACE cache is O(n_clients · params);
+# big archs use the paper's int8 compression (F.3.3) + bf16 running mean.
+AFL_SIZING = {
+    "llama3-405b": dict(n_clients=2, cache_dtype="int8", state_dtype="bfloat16"),
+    "arctic-480b": dict(n_clients=2, cache_dtype="int8", state_dtype="bfloat16"),
+    "qwen3-moe-235b-a22b": dict(n_clients=4, cache_dtype="int8",
+                                state_dtype="bfloat16"),
+    "qwen2-vl-7b": dict(n_clients=16, cache_dtype="int8"),
+    "yi-9b": dict(n_clients=16, cache_dtype="int8"),
+    "minicpm3-4b": dict(n_clients=16, cache_dtype="int8"),
+}
+
+
+def get_config(arch: str, *, shape: Optional[str] = None,
+               dtype: Optional[str] = None) -> ModelConfig:
+    """Resolve an arch id (+ shape-specific variant swaps) to a ModelConfig."""
+    cfg = ARCHS[arch]
+    if arch == "gemma2-2b" and shape == "long_500k":
+        cfg = gemma2_2b.swa_variant()
+    if dtype:
+        cfg = dataclasses.replace(cfg, dtype=dtype)
+    return cfg
+
+
+def afl_config(arch: str, **over) -> AFLConfig:
+    kw = dict(AFL_SIZING.get(arch, dict(n_clients=16, cache_dtype="float32")))
+    kw.update(over)
+    return AFLConfig(**kw)
+
+
+def supports_shape(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_OK
+    return True
+
+
+def skip_reason(arch: str, shape: str) -> str:
+    if not supports_shape(arch, shape):
+        return ("full-attention arch; long_500k requires sub-quadratic decode "
+                "(see DESIGN.md §Arch-applicability)")
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str,
+                batch_override: Optional[int] = None) -> Dict:
+    """Batch pytree spec for train/prefill; (tokens, pos, cache) for decode."""
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B = batch_override or shape.global_batch
+    L = shape.seq_len
+    act_dt = jnp.dtype(cfg.dtype)
+
+    if shape.mode in ("train", "prefill"):
+        batch = {}
+        if cfg.frontend == "vision":
+            np_ = cfg.num_patches
+            batch["tokens"] = _sds((B, L - np_), jnp.int32)
+            batch["vision_embeds"] = _sds((B, np_, cfg.d_model), act_dt)
+            batch["positions3"] = _sds((B, 3, L), jnp.int32)
+        elif cfg.frontend == "audio":
+            batch["audio_embeds"] = _sds((B, L // cfg.encoder_frames_ratio,
+                                          cfg.d_model), act_dt)
+            batch["tokens"] = _sds((B, L), jnp.int32)
+        else:
+            batch["tokens"] = _sds((B, L), jnp.int32)
+        if shape.mode == "train":
+            batch["targets"] = _sds((B, L), jnp.int32)
+        return {"batch": batch}
+
+    # decode: single token against a seq_len-deep cache
+    from repro.models import build_model  # late import to avoid cycles
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, L))
+    return {"tokens": _sds((B,), jnp.int32),
+            "pos": _sds((), jnp.int32),
+            "cache": cache}
+
+
+def concrete_batch(cfg: ModelConfig, shape: InputShape | str, rng=None,
+                   batch_override: Optional[int] = None):
+    """Materialize a random batch matching input_specs (smoke tests/examples)."""
+    import numpy as np
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    specs = input_specs(cfg, shape, batch_override)
+    rng = np.random.default_rng(0 if rng is None else rng)
+
+    def mk(s):
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size if s.shape and s.shape[-1] != 3 else 4
+            return jnp.asarray(rng.integers(0, min(hi, cfg.vocab_size),
+                                            size=s.shape), jnp.int32)
+        return jnp.asarray(rng.normal(size=s.shape) * 0.05, s.dtype)
+    return jax.tree.map(mk, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

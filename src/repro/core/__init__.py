@@ -1,0 +1,10 @@
+from repro.core.aggregators import (ACED, ALGORITHMS, ACEDirect,
+                                    ACEIncremental, Aggregator, Arrival,
+                                    CA2FL, DelayAdaptiveASGD, FedBuff,
+                                    VanillaASGD, make_aggregator)
+from repro.core.cache import (FlatCache, dequantize_rows, init_flat_cache,
+                              init_tree_cache, quantize_rows, tree_cache_mean,
+                              tree_cache_nbytes, tree_cache_row,
+                              tree_cache_set_row)
+from repro.core.delays import ExponentialDelays, arrival_schedule
+from repro.core.simulator import AFLSimulator, SimResult

@@ -1,0 +1,207 @@
+"""Server aggregation rules — the paper's algorithm zoo.
+
+Implemented exactly as specified:
+  * Vanilla ASGD            [Mishchenko et al., 2022]     (m=1, immediate)
+  * Delay-adaptive ASGD     [Koloskova et al., 2022]      (m=1, lr ∝ 1/τ for stragglers)
+  * FedBuff                 [Nguyen et al., 2022]         (buffer M, partial participation)
+  * CA²FL                   [Wang et al., 2024]           (buffer M + cached calibration)
+  * ACE direct              (paper Alg. 1)                (all-client cache, mean each arrival)
+  * ACE incremental         (paper Alg. a.5)              (u += (g_new − g_prev)/n, O(d))
+  * ACED                    (paper Alg. a.1)              (bounded-delay active set τ_algo)
+
+All operate on flat (d,) payload vectors against a `FlatCache`; the pjit
+distributed path (repro/core/distributed.py) reuses the same rules over
+pytree caches. The server applies ``w ← w − η · lr_scale · update``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import FlatCache, init_flat_cache
+
+
+class Arrival(NamedTuple):
+    client: int
+    payload: jnp.ndarray        # gradient-like descent direction (d,)
+    t: int                      # server iteration counter
+    staleness: int              # server iterations since client got its model
+
+
+class Aggregator:
+    """Base: subclasses define init_state / on_arrival."""
+    name = "base"
+    #: server iterations advance only when an update is emitted
+    def init_state(self, n: int, d: int, init_grads=None) -> Any:
+        raise NotImplementedError
+
+    def on_arrival(self, state, arr: Arrival):
+        """-> (state, update (d,) or None, lr_scale float)."""
+        raise NotImplementedError
+
+    def nbytes(self, state) -> int:
+        import numpy as _np
+        return sum(_np.asarray(a).nbytes for a in jax.tree.leaves(state))
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class VanillaASGD(Aggregator):
+    name = "asgd"
+
+    def init_state(self, n, d, init_grads=None):
+        return ()
+
+    def on_arrival(self, state, arr):
+        return state, arr.payload, 1.0
+
+
+@dataclasses.dataclass
+class DelayAdaptiveASGD(Aggregator):
+    """η_t = η if τ ≤ τ_C else η·τ_C/τ (down-weight stale gradients)."""
+    tau_c: float = 10.0
+    name = "delay_asgd"
+
+    def init_state(self, n, d, init_grads=None):
+        return ()
+
+    def on_arrival(self, state, arr):
+        tau = max(int(arr.staleness), 0)
+        scale = 1.0 if tau <= self.tau_c else float(self.tau_c) / float(tau)
+        return state, arr.payload, scale
+
+
+@dataclasses.dataclass
+class FedBuff(Aggregator):
+    buffer_size: int = 10
+    name = "fedbuff"
+
+    def init_state(self, n, d, init_grads=None):
+        return {"accum": jnp.zeros((d,), jnp.float32), "count": 0}
+
+    def on_arrival(self, state, arr):
+        accum = state["accum"] + arr.payload
+        count = state["count"] + 1
+        if count >= self.buffer_size:
+            return {"accum": jnp.zeros_like(accum), "count": 0}, \
+                accum / count, 1.0
+        return {"accum": accum, "count": count}, None, 1.0
+
+
+@dataclasses.dataclass
+class CA2FL(Aggregator):
+    """Cache-aided calibration: v = h̄ + Σ_{i∈S}(Δ_i − h_i)/m (paper Alg. a.3)."""
+    buffer_size: int = 10
+    name = "ca2fl"
+
+    def init_state(self, n, d, init_grads=None):
+        h = jnp.zeros((n, d), jnp.float32)
+        if init_grads is not None:
+            h = init_grads.astype(jnp.float32)
+        return {"h": h, "h_bar": jnp.mean(h, 0),
+                "accum": jnp.zeros((d,), jnp.float32), "count": 0}
+
+    def on_arrival(self, state, arr):
+        j = jnp.asarray(arr.client, jnp.int32)
+        accum = state["accum"] + (arr.payload - state["h"][j])
+        h = state["h"].at[j].set(arr.payload)
+        count = state["count"] + 1
+        if count >= self.buffer_size:
+            v = state["h_bar"] + accum / count
+            return {"h": h, "h_bar": jnp.mean(h, 0),
+                    "accum": jnp.zeros_like(accum), "count": 0}, v, 1.0
+        return {"h": h, "h_bar": state["h_bar"], "accum": accum,
+                "count": count}, None, 1.0
+
+
+@dataclasses.dataclass
+class ACEDirect(Aggregator):
+    """Paper Algorithm 1: cache row j ← g, update = mean over all n rows."""
+    cache_dtype: str = "float32"
+    name = "ace_direct"
+
+    def init_state(self, n, d, init_grads=None):
+        return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads)}
+
+    def on_arrival(self, state, arr):
+        cache = state["cache"].set_row(arr.client, arr.payload)
+        return {"cache": cache}, cache.mean(), 1.0
+
+
+@dataclasses.dataclass
+class ACEIncremental(Aggregator):
+    """Paper Algorithm a.5: u ← u + (g − dq(C_j))/n — O(d) per arrival.
+
+    Exact under int8 cache: the subtracted value is the dequantized row that
+    was previously added, so ``u == mean_i dq(C_i)`` is invariant."""
+    cache_dtype: str = "float32"
+    name = "ace"
+
+    def init_state(self, n, d, init_grads=None):
+        cache = init_flat_cache(n, d, self.cache_dtype, init_grads)
+        return {"cache": cache, "u": cache.mean()}
+
+    def on_arrival(self, state, arr):
+        cache, u = state["cache"], state["u"]
+        old = cache.row(arr.client)
+        cache = cache.set_row(arr.client, arr.payload)
+        new = cache.row(arr.client)      # re-read: includes quantization error
+        u = u + (new - old) / cache.n
+        return {"cache": cache, "u": u}, u, 1.0
+
+
+@dataclasses.dataclass
+class ACED(Aggregator):
+    """Paper Algorithm a.1: active set A(t) = {i : t − t_start_i ≤ τ_algo}."""
+    tau_algo: int = 10
+    cache_dtype: str = "float32"
+    name = "aced"
+
+    def init_state(self, n, d, init_grads=None):
+        return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads),
+                "t_start": jnp.ones((n,), jnp.int32)}
+
+    def on_arrival(self, state, arr):
+        cache = state["cache"].set_row(arr.client, arr.payload)
+        t_start = state["t_start"].at[jnp.asarray(arr.client, jnp.int32)].set(arr.t + 1)
+        active = (arr.t - t_start) <= self.tau_algo
+        n_active = int(jnp.sum(active))
+        new_state = {"cache": cache, "t_start": t_start}
+        if n_active == 0:
+            return new_state, None, 1.0
+        return new_state, cache.mean(active), 1.0
+
+
+ALGORITHMS = {
+    "asgd": VanillaASGD,
+    "delay_asgd": DelayAdaptiveASGD,
+    "fedbuff": FedBuff,
+    "ca2fl": CA2FL,
+    "ace_direct": ACEDirect,
+    "ace": ACEIncremental,
+    "aced": ACED,
+}
+
+
+def make_aggregator(cfg) -> Aggregator:
+    """Build from an AFLConfig."""
+    a = cfg.algorithm
+    if a == "asgd":
+        return VanillaASGD()
+    if a == "delay_asgd":
+        return DelayAdaptiveASGD(tau_c=cfg.max_delay_scale * cfg.delay_beta)
+    if a == "fedbuff":
+        return FedBuff(buffer_size=cfg.buffer_size)
+    if a == "ca2fl":
+        return CA2FL(buffer_size=cfg.buffer_size)
+    if a == "ace_direct":
+        return ACEDirect(cache_dtype=cfg.cache_dtype)
+    if a == "ace":
+        return ACEIncremental(cache_dtype=cfg.cache_dtype)
+    if a == "aced":
+        return ACED(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype)
+    raise ValueError(f"unknown AFL algorithm {a!r}")

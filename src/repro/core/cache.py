@@ -1,0 +1,153 @@
+"""Server-side per-client gradient cache — the O(nd) state that makes ACE's
+all-client aggregation possible (paper §3.4, Table a.3), with the paper's
+8-bit compression (App. F.3.3) as a first-class dtype.
+
+Two layouts:
+  * flat  — (n, d) array over raveled params (simulator / small models)
+  * tree  — pytree of stacked leaves {q: (n, *s), scale: (n,)} (distributed)
+
+Quantization is symmetric per-row int8: scale = max|row| / 127. The ACE
+incremental rule stays *exact* under quantization because the server subtracts
+exactly the dequantized value it previously added: the invariant
+``u == mean_i dq(C[i])`` holds to fp rounding.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize_rows(x, axis=-1):
+    """x (..., d) -> (q int8, scale (...,))."""
+    scale = jnp.max(jnp.abs(x), axis=axis) / INT8_MAX
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / jnp.expand_dims(scale, axis)), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_rows(q, scale, axis=-1):
+    return q.astype(jnp.float32) * jnp.expand_dims(scale, axis)
+
+
+class FlatCache(NamedTuple):
+    """(n, d) gradient cache; data is int8 (with scale) or float."""
+    data: jax.Array              # (n, d) int8|bf16|f32
+    scale: jax.Array             # (n,) f32 (unused for float dtypes)
+
+    @property
+    def n(self):
+        return self.data.shape[0]
+
+    def row(self, i):
+        i = jnp.asarray(i, jnp.int32)
+        r = jax.lax.dynamic_index_in_dim(self.data, i, keepdims=False)
+        if self.data.dtype == jnp.int8:
+            s = jax.lax.dynamic_index_in_dim(self.scale, i, keepdims=False)
+            return r.astype(jnp.float32) * s
+        return r.astype(jnp.float32)
+
+    def set_row(self, i, g):
+        i = jnp.asarray(i, jnp.int32)
+        if self.data.dtype == jnp.int8:
+            q, s = quantize_rows(g)
+            return FlatCache(
+                jax.lax.dynamic_update_index_in_dim(self.data, q, i, 0),
+                jax.lax.dynamic_update_index_in_dim(self.scale, s, i, 0))
+        return FlatCache(
+            jax.lax.dynamic_update_index_in_dim(
+                self.data, g.astype(self.data.dtype), i, 0),
+            self.scale)
+
+    def dequant(self):
+        """(n, d) f32 view."""
+        if self.data.dtype == jnp.int8:
+            return self.data.astype(jnp.float32) * self.scale[:, None]
+        return self.data.astype(jnp.float32)
+
+    def mean(self, mask=None):
+        """Direct aggregation (paper Alg. 1 line 10 / Alg. a.1 line 7)."""
+        rows = self.dequant()
+        if mask is None:
+            return jnp.mean(rows, axis=0)
+        m = mask.astype(jnp.float32)
+        return jnp.sum(rows * m[:, None], 0) / jnp.maximum(jnp.sum(m), 1.0)
+
+    def nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize + self.scale.nbytes
+
+
+def init_flat_cache(n: int, d: int, dtype: str = "float32",
+                    init_rows=None) -> FlatCache:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}[dtype]
+    if init_rows is not None:
+        if dt == jnp.int8:
+            q, s = quantize_rows(init_rows)
+            return FlatCache(q, s)
+        return FlatCache(init_rows.astype(dt), jnp.ones((n,), jnp.float32))
+    return FlatCache(jnp.zeros((n, d), dt), jnp.ones((n,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Tree cache (distributed path): one stacked cache per param leaf.
+# ---------------------------------------------------------------------------
+
+def init_tree_cache(n: int, grads_like, dtype: str = "float32"):
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}[dtype]
+
+    def leaf(g):
+        data = jnp.zeros((n,) + g.shape, dt)
+        if dt == jnp.int8:
+            return {"q": data, "scale": jnp.ones((n,), jnp.float32)}
+        return {"q": data}
+    return jax.tree.map(leaf, grads_like)
+
+
+def tree_cache_row(cache, i):
+    def leaf(c):
+        r = jax.lax.dynamic_index_in_dim(c["q"], i, keepdims=False)
+        if c["q"].dtype == jnp.int8:
+            s = jax.lax.dynamic_index_in_dim(c["scale"], i, keepdims=False)
+            return r.astype(jnp.float32) * s
+        return r.astype(jnp.float32)
+    return jax.tree.map(leaf, cache, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def tree_cache_set_row(cache, i, grads):
+    def leaf(c, g):
+        if c["q"].dtype == jnp.int8:
+            # axis-preserving scale reduction: flattening (reshape(-1)) would
+            # destroy the leaf's 2-D (data, model) sharding and force XLA to
+            # all-gather the full gradient — ~2x params of ICI traffic per
+            # step at 405B scale (see EXPERIMENTS.md §Perf iteration 1).
+            s = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) \
+                / INT8_MAX
+            q = jnp.clip(jnp.round(g.astype(jnp.float32) / s), -127, 127
+                         ).astype(jnp.int8)
+            return {"q": jax.lax.dynamic_update_index_in_dim(c["q"], q, i, 0),
+                    "scale": jax.lax.dynamic_update_index_in_dim(
+                        c["scale"], s.astype(jnp.float32), i, 0)}
+        return {"q": jax.lax.dynamic_update_index_in_dim(
+                    c["q"], g.astype(c["q"].dtype), i, 0)}
+    return jax.tree.map(leaf, cache, grads,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def tree_cache_mean(cache, mask=None):
+    def leaf(c):
+        rows = c["q"].astype(jnp.float32)
+        if c["q"].dtype == jnp.int8:
+            s = c["scale"].reshape((-1,) + (1,) * (rows.ndim - 1))
+            rows = rows * s
+        if mask is None:
+            return jnp.mean(rows, axis=0)
+        m = mask.astype(jnp.float32).reshape((-1,) + (1,) * (rows.ndim - 1))
+        return jnp.sum(rows * m, 0) / jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    return jax.tree.map(leaf, cache, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def tree_cache_nbytes(cache) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))

@@ -1,0 +1,187 @@
+"""Distributed (pjit) AFL server step — the paper's technique at pod scale.
+
+One physical step = one server iteration of Algorithm 1 / a.1:
+  1. the *arriving* client's gradient is computed by the whole mesh
+     (its batch shards over (pod, data); params/optimizer FSDP+TP shard);
+  2. the server rule updates the sharded per-client cache + running mean
+     (ACE incremental O(d); ACED masked aggregation; baselines likewise);
+  3. w ← w − η·scale·u.
+
+Staleness is emergent: a client's cache row was written when it last arrived,
+so its age in server iterations is exactly the paper's τ_i^t — no stale model
+copies are stored (see DESIGN.md §3). The arrival schedule is precomputed
+host-side from the delay model and fed as a scalar per step.
+
+Cache sharding: client axis → `data`, feature dims → `model` (via the leaf's
+own sharding), so aggregation adds no collectives beyond the gradient's own
+reduce-scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AFLConfig
+from repro.core import cache as cache_lib
+from repro.optim.optim import Optimizer
+
+
+class AFLTrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    afl: Any            # algorithm-specific server state (pytree)
+    step: jnp.ndarray   # server iteration t
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-specific server states over gradient pytrees
+# ---------------------------------------------------------------------------
+
+def init_afl_state(cfg: AFLConfig, grads_like):
+    n = cfg.n_clients
+    a = cfg.algorithm
+    sdt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda: jax.tree.map(lambda g: jnp.zeros_like(g, sdt), grads_like)
+    if a in ("ace", "ace_direct"):
+        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
+                "u": zeros()}
+    if a == "aced":
+        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
+                "t_start": jnp.ones((n,), jnp.int32)}
+    if a == "fedbuff":
+        return {"accum": zeros(), "count": jnp.zeros((), jnp.int32)}
+    if a == "ca2fl":
+        return {"h": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
+                "h_bar": zeros(), "accum": zeros(),
+                "count": jnp.zeros((), jnp.int32)}
+    if a in ("asgd", "delay_asgd"):
+        return {}
+    raise ValueError(a)
+
+
+def apply_server_rule(cfg: AFLConfig, afl_state, grads, client, t, staleness):
+    """-> (new_afl_state, update (grads-like), lr_scale scalar)."""
+    n = cfg.n_clients
+    a = cfg.algorithm
+    one = jnp.ones((), jnp.float32)
+    if a == "ace":
+        cache, u = afl_state["cache"], afl_state["u"]
+        old = cache_lib.tree_cache_row(cache, client)
+        cache = cache_lib.tree_cache_set_row(cache, client, grads)
+        new = cache_lib.tree_cache_row(cache, client)
+        u = jax.tree.map(
+            lambda u_, nw, od: (u_.astype(jnp.float32) + (nw - od) / n
+                                ).astype(u_.dtype), u, new, old)
+        return {"cache": cache, "u": u}, u, one
+    if a == "ace_direct":
+        cache = cache_lib.tree_cache_set_row(afl_state["cache"], client, grads)
+        u = cache_lib.tree_cache_mean(cache)
+        return {"cache": cache, "u": afl_state["u"]}, u, one
+    if a == "aced":
+        cache = cache_lib.tree_cache_set_row(afl_state["cache"], client, grads)
+        t_start = afl_state["t_start"].at[client].set(t + 1)
+        active = (t - t_start) <= cfg.tau_algo
+        u = cache_lib.tree_cache_mean(cache, active)
+        # if no client active, emit zero update (w unchanged) — Alg. a.1 line 8
+        any_active = jnp.any(active).astype(jnp.float32)
+        u = jax.tree.map(lambda x: x * any_active, u)
+        return {"cache": cache, "t_start": t_start}, u, one
+    if a == "fedbuff":
+        accum = jax.tree.map(lambda a_, g: (a_.astype(jnp.float32)
+                                            + g.astype(jnp.float32)).astype(a_.dtype),
+                             afl_state["accum"], grads)
+        count = afl_state["count"] + 1
+        flush = count >= cfg.buffer_size
+        u = jax.tree.map(
+            lambda x: jnp.where(flush, x / count.astype(jnp.float32), 0.0), accum)
+        accum = jax.tree.map(lambda x: jnp.where(flush, 0.0, x), accum)
+        count = jnp.where(flush, 0, count)
+        return {"accum": accum, "count": count}, u, one
+    if a == "ca2fl":
+        h, accum = afl_state["h"], afl_state["accum"]
+        old = cache_lib.tree_cache_row(h, client)
+        accum = jax.tree.map(
+            lambda a_, g, o: (a_.astype(jnp.float32) + (g.astype(jnp.float32) - o)
+                              ).astype(a_.dtype), accum, grads, old)
+        h = cache_lib.tree_cache_set_row(h, client, grads)
+        count = afl_state["count"] + 1
+        flush = count >= cfg.buffer_size
+        v = jax.tree.map(
+            lambda hb, ac: jnp.where(flush, hb.astype(jnp.float32)
+                                     + ac.astype(jnp.float32)
+                                     / count.astype(jnp.float32), 0.0),
+            afl_state["h_bar"], accum)
+        h_bar = jax.tree.map(
+            lambda hb, hm: jnp.where(flush, hm, hb.astype(jnp.float32)
+                                     ).astype(hb.dtype),
+            afl_state["h_bar"], cache_lib.tree_cache_mean(h))
+        accum = jax.tree.map(lambda x: jnp.where(flush, 0.0, x), accum)
+        count = jnp.where(flush, 0, count)
+        return {"h": h, "h_bar": h_bar, "accum": accum, "count": count}, v, one
+    if a == "asgd":
+        return afl_state, grads, one
+    if a == "delay_asgd":
+        tau_c = cfg.max_delay_scale * cfg.delay_beta
+        s = jnp.minimum(one, tau_c / jnp.maximum(staleness.astype(jnp.float32), 1.0))
+        return afl_state, grads, s
+    raise ValueError(a)
+
+
+# ---------------------------------------------------------------------------
+# Train step factory
+# ---------------------------------------------------------------------------
+
+def make_afl_train_step(loss_fn: Callable, cfg: AFLConfig, opt: Optimizer,
+                        remat: str = "full"):
+    """loss_fn(params, batch) -> scalar. Returns (init_fn, step_fn).
+
+    step_fn(state, batch, client, staleness) -> (state, metrics)."""
+
+    def init_fn(params):
+        grads_like = params
+        return AFLTrainState(params=params, opt_state=opt.init(params),
+                             afl=init_afl_state(cfg, grads_like),
+                             step=jnp.zeros((), jnp.int32))
+
+    def step_fn(state: AFLTrainState, batch, client, staleness):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        new_afl, u, scale = apply_server_rule(cfg, state.afl, grads, client,
+                                              state.step, staleness)
+        scaled = jax.tree.map(lambda x: (scale * x).astype(jnp.float32), u)
+        updates, new_opt = opt.update(scaled, state.opt_state, state.params)
+        new_params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype),
+                                  state.params, updates)
+        metrics = {
+            "loss": loss,
+            "grad_norm": optax_global_norm(grads),
+            "update_norm": optax_global_norm(u),
+            "lr_scale": scale,
+        }
+        return AFLTrainState(new_params, new_opt, new_afl, state.step + 1), metrics
+
+    return init_fn, step_fn
+
+
+def optax_global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def afl_state_bytes(cfg: AFLConfig, params) -> int:
+    """Analytic server-state memory (paper Table a.3) without allocating."""
+    d_bytes = {"float32": 4, "bfloat16": 2, "int8": 1}[cfg.cache_dtype]
+    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    a = cfg.algorithm
+    if a in ("ace", "ace_direct"):
+        return cfg.n_clients * d * d_bytes + d * 4
+    if a == "aced":
+        return cfg.n_clients * d * d_bytes + cfg.n_clients * 4
+    if a == "ca2fl":
+        return cfg.n_clients * d * d_bytes + 2 * d * 4
+    if a == "fedbuff":
+        return d * 4
+    return 0

@@ -1,0 +1,159 @@
+"""Ready-made FL tasks binding synthetic data + Dirichlet partition + a small
+model into (grad_fn, eval_fn, params0) for the AFL simulator. Used by the
+paper-reproduction benchmarks (Fig. 2/3, Tables a.2/a.3) and examples."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification, make_text_classification
+
+
+# ---------------------------------------------------------------------------
+# Small models (pure JAX)
+# ---------------------------------------------------------------------------
+
+def mlp_classifier(dims):
+    def init(rng):
+        params = []
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            rng, k = jax.random.split(rng)
+            params.append({"w": jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5,
+                           "b": jnp.zeros((b,))})
+        return params
+
+    def apply(params, x):
+        for i, p in enumerate(params):
+            x = x @ p["w"] + p["b"]
+            if i < len(params) - 1:
+                x = jax.nn.relu(x)
+        return x
+    return init, apply
+
+
+def tiny_text_classifier(vocab, d, n_classes, seq_len):
+    """Embedding + mean-pool + 2-layer head — the BERT-experiment stand-in."""
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "emb": jax.random.normal(k1, (vocab, d)) * 0.05,
+            "w1": jax.random.normal(k2, (d, d)) * (2.0 / d) ** 0.5,
+            "b1": jnp.zeros((d,)),
+            "w2": jax.random.normal(k3, (d, n_classes)) * (1.0 / d) ** 0.5,
+            "b2": jnp.zeros((n_classes,)),
+        }
+
+    def apply(params, toks):
+        h = jnp.mean(params["emb"][toks], axis=1)
+        h = jax.nn.relu(h @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+    return init, apply
+
+
+def _xent(logits, y):
+    logz = jax.scipy.special.logsumexp(logits, -1)
+    return jnp.mean(logz - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
+
+
+def _pad_clients(xs, ys, parts):
+    """Pad per-client datasets to a common length (single jit specialization);
+    sampling draws indices modulo the true count."""
+    mx = max(len(ix) for ix in parts)
+    cx = np.zeros((len(parts), mx) + xs.shape[1:], xs.dtype)
+    cy = np.zeros((len(parts), mx), ys.dtype)
+    cn = np.zeros((len(parts),), np.int32)
+    for i, ix in enumerate(parts):
+        cx[i, :len(ix)] = xs[ix]
+        cy[i, :len(ix)] = ys[ix]
+        cn[i] = len(ix)
+    return jnp.asarray(cx), jnp.asarray(cy), jnp.asarray(cn)
+
+
+@dataclasses.dataclass
+class FLTask:
+    params0: object
+    grad_fn: Callable      # (params, client, rng) -> (loss, grads)
+    eval_fn: Callable      # (params) -> {"accuracy": float}
+    n_clients: int
+    meta: Dict
+
+
+def make_vision_task(*, n_clients=100, alpha=0.3, batch=50, n_classes=10,
+                     dim=64, hidden=(128, 64), n_train=20000, n_test=4000,
+                     noise=0.6, seed=0) -> FLTask:
+    """CIFAR-10 stand-in: Gaussian-mixture classification, Dir(α) partition."""
+    x, y = make_classification(n_train + n_test, n_classes, dim, noise=noise,
+                               seed=seed)
+    xtr, ytr, xte, yte = x[:n_train], y[:n_train], x[n_train:], y[n_train:]
+    parts = dirichlet_partition(ytr, n_clients, alpha, seed=seed + 1)
+    init, apply = mlp_classifier((dim,) + tuple(hidden) + (n_classes,))
+    params0 = init(jax.random.PRNGKey(seed))
+
+    client_x, client_y, client_n = _pad_clients(xtr, ytr, parts)
+
+    @jax.jit
+    def _grad(params, client, rng):
+        cx, cy, cn = client_x[client], client_y[client], client_n[client]
+        ix = jax.random.randint(rng, (batch,), 0, cn)
+        xb, yb = cx[ix], cy[ix]
+
+        def loss_fn(p):
+            return _xent(apply(p, xb), yb)
+        return jax.value_and_grad(loss_fn)(params)
+
+    def grad_fn(params, client, rng):
+        return _grad(params, jnp.asarray(client, jnp.int32), rng)
+
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+
+    @jax.jit
+    def _acc(params):
+        return jnp.mean(jnp.argmax(apply(params, xte_j), -1) == yte_j)
+
+    def eval_fn(params):
+        return {"accuracy": float(_acc(params))}
+
+    return FLTask(params0, grad_fn, eval_fn, n_clients,
+                  {"alpha": alpha, "kind": "vision"})
+
+
+def make_text_task(*, n_clients=20, alpha=1.0, batch=32, n_classes=20,
+                   vocab=1024, d=64, seq_len=64, n_train=6000, n_test=2000,
+                   seed=0) -> FLTask:
+    """20Newsgroup stand-in for the DistilBERT/BERT table (a.2)."""
+    x, y = make_text_classification(n_train + n_test, n_classes, seq_len,
+                                    vocab, seed=seed)
+    xtr, ytr, xte, yte = x[:n_train], y[:n_train], x[n_train:], y[n_train:]
+    parts = dirichlet_partition(ytr, n_clients, alpha, seed=seed + 1)
+    init, apply = tiny_text_classifier(vocab, d, n_classes, seq_len)
+    params0 = init(jax.random.PRNGKey(seed))
+    client_x, client_y, client_n = _pad_clients(xtr, ytr, parts)
+
+    @jax.jit
+    def _grad(params, client, rng):
+        cx, cy, cn = client_x[client], client_y[client], client_n[client]
+        ix = jax.random.randint(rng, (batch,), 0, cn)
+
+        def loss_fn(p):
+            return _xent(apply(p, cx[ix]), cy[ix])
+        return jax.value_and_grad(loss_fn)(params)
+
+    def grad_fn(params, client, rng):
+        return _grad(params, jnp.asarray(client, jnp.int32), rng)
+
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+
+    @jax.jit
+    def _acc(params):
+        return jnp.mean(jnp.argmax(apply(params, xte_j), -1) == yte_j)
+
+    def eval_fn(params):
+        return {"accuracy": float(_acc(params))}
+
+    return FLTask(params0, grad_fn, eval_fn, n_clients,
+                  {"alpha": alpha, "kind": "text"})

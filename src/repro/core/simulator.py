@@ -1,0 +1,169 @@
+"""Event-driven asynchronous-FL simulator — the paper's experimental protocol.
+
+Faithful iteration semantics:
+  * n clients compute on the model version they last received (wall-clock
+    exponential delays); the server processes arrivals in time order.
+  * One *server iteration* t = one global model update (buffered algorithms
+    advance t once per buffer flush, exactly as the paper counts T).
+  * Staleness τ = t − t_received, measured in server iterations.
+  * Concurrency M_c: how many clients compute simultaneously (paper Table a.4:
+    ACE/ACED = n, FedBuff/CA²FL = 20, Vanilla ASGD = 1).
+  * Optional permanent dropouts at a given server iteration (paper Fig. 3).
+
+The simulator is host-driven (heapq event queue) around a jitted grad_fn, and
+works on flat parameter vectors via ravel_pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.aggregators import Aggregator, Arrival
+from repro.core.delays import ExponentialDelays
+
+
+@dataclasses.dataclass
+class SimResult:
+    ts: List[int]
+    losses: List[float]
+    evals: List[Dict]
+    eval_ts: List[int]
+    total_comms: int
+    update_norms: List[float]
+
+    def final_eval(self):
+        return self.evals[-1] if self.evals else {}
+
+
+class AFLSimulator:
+    def __init__(self, *, grad_fn: Callable, params0, aggregator: Aggregator,
+                 n_clients: int, server_lr, delays: ExponentialDelays,
+                 local_steps: int = 1, local_lr: float = 0.05,
+                 concurrency: Optional[int] = None,
+                 eval_fn: Optional[Callable] = None, eval_every: int = 50,
+                 dropout_frac: float = 0.0, dropout_at: Optional[int] = None,
+                 init_cache_grads: bool = True, seed: int = 0):
+        """grad_fn(params_pytree, client:int, rng) -> (loss, grad_pytree)."""
+        self.grad_fn = grad_fn
+        flat, self.unravel = ravel_pytree(params0)
+        self.w = np.asarray(flat, np.float32)
+        self.d = self.w.size
+        self.agg = aggregator
+        self.n = n_clients
+        self.server_lr = server_lr if callable(server_lr) else (lambda t: server_lr)
+        self.delays = delays
+        self.K = local_steps
+        self.local_lr = local_lr
+        self.concurrency = concurrency or n_clients
+        self.eval_fn = eval_fn
+        self.eval_every = eval_every
+        self.dropout_frac = dropout_frac
+        self.dropout_at = dropout_at
+        self.init_cache_grads = init_cache_grads
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------------
+    def _client_payload(self, w_flat: np.ndarray, client: int):
+        """Run K local steps from w_flat; return (payload, last_loss)."""
+        self.key, sub = jax.random.split(self.key)
+        params = self.unravel(jnp.asarray(w_flat))
+        if self.K == 1:
+            loss, g = self.grad_fn(params, client, sub)
+            return np.asarray(ravel_pytree(g)[0], np.float32), float(loss)
+        w = jnp.asarray(w_flat)
+        loss = 0.0
+        for k in range(self.K):
+            self.key, sub = jax.random.split(self.key)
+            loss, g = self.grad_fn(self.unravel(w), client, sub)
+            w = w - self.local_lr * ravel_pytree(g)[0]
+        payload = (jnp.asarray(w_flat) - w) / (self.K * self.local_lr)
+        return np.asarray(payload, np.float32), float(loss)
+
+    # ------------------------------------------------------------------
+    def run(self, T: int) -> SimResult:
+        n = self.n
+        total_comms = 0
+
+        init_rows = None
+        wants_cache_init = hasattr(self.agg, "cache_dtype")
+        if self.init_cache_grads and wants_cache_init:
+            rows = []
+            for i in range(n):
+                p, _ = self._client_payload(self.w, i)
+                rows.append(p)
+            init_rows = jnp.asarray(np.stack(rows))
+            total_comms += n
+        state = self.agg.init_state(n, self.d, init_rows)
+
+        t = 0
+        if init_rows is not None:
+            # paper Alg. 1 line 4-5: apply u^0 before the loop
+            u0 = np.asarray(jnp.mean(init_rows, 0))
+            self.w = self.w - self.server_lr(0) * u0
+            t = 1
+
+        # --- event queue -------------------------------------------------
+        heap: list = []
+        seq = 0
+        t_received = np.zeros(n, np.int64)
+        w_received = {}
+        if self.concurrency < n:
+            running = list(self.rng.choice(n, size=self.concurrency,
+                                           replace=False))
+        else:
+            running = list(range(n))
+        idle = [c for c in range(n) if c not in set(running)]
+        now = 0.0
+        for c in running:
+            heapq.heappush(heap, (now + self.delays.sample(c), seq, c)); seq += 1
+            t_received[c] = t
+            w_received[c] = self.w.copy()
+
+        dropped = set()
+        res = SimResult([], [], [], [], 0, [])
+        while t < T:
+            if not heap:
+                break
+            now, _, j = heapq.heappop(heap)
+            if j in dropped:
+                continue
+            payload, loss = self._client_payload(w_received[j], j)
+            total_comms += 1
+            staleness = t - t_received[j]
+            state, update, lr_scale = self.agg.on_arrival(
+                state, Arrival(j, jnp.asarray(payload), t, int(staleness)))
+            if update is not None:
+                self.w = self.w - self.server_lr(t) * lr_scale * np.asarray(update)
+                res.ts.append(t)
+                res.losses.append(loss)
+                res.update_norms.append(float(np.linalg.norm(np.asarray(update))))
+                t += 1
+                if self.eval_fn and (t % self.eval_every == 0 or t == T):
+                    res.evals.append(self.eval_fn(self.unravel(jnp.asarray(self.w))))
+                    res.eval_ts.append(t)
+            # dropout trigger
+            if (self.dropout_at is not None and t >= self.dropout_at
+                    and self.dropout_frac > 0 and not dropped):
+                k = int(self.dropout_frac * n)
+                dropped = set(self.rng.choice(n, size=k, replace=False).tolist())
+            # redispatch
+            if j not in dropped:
+                if self.concurrency >= n or not idle:
+                    nxt = j
+                else:
+                    idle.append(j)
+                    nxt = idle.pop(int(self.rng.integers(len(idle))))
+                if nxt not in dropped:
+                    t_received[nxt] = t
+                    w_received[nxt] = self.w.copy()
+                    heapq.heappush(heap, (now + self.delays.sample(nxt), seq, nxt))
+                    seq += 1
+        res.total_comms = total_comms
+        return res

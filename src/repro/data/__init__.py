@@ -1,0 +1,3 @@
+from repro.data.partition import dirichlet_partition, label_histograms
+from repro.data.synthetic import (batch_iterator, make_classification,
+                                  make_text_classification, make_token_stream)

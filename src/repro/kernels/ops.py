@@ -1,0 +1,52 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+`backend` selection:
+  * "pallas"  — pl.pallas_call, compiled (TPU target)
+  * "interpret" — pl.pallas_call(interpret=True): kernel body executed in
+    Python on CPU, used for all correctness validation in this container
+  * "xla"     — the pure-jnp oracle from ref.py (default on CPU: fastest here,
+    and what the distributed train step lowers on the dry-run)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cache_update as _cu
+from repro.kernels import masked_agg as _ma
+from repro.kernels import quant as _q
+from repro.kernels import ref
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def cache_row_update(u, g, c_row, old_scale, new_scale, inv_n, backend=None):
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.cache_row_update_ref(u, g, c_row, old_scale, new_scale, inv_n)
+    return _cu.cache_row_update(u, g, c_row, old_scale, new_scale, inv_n,
+                                interpret=(backend == "interpret"))
+
+
+def masked_agg(cache, scales, mask, backend=None):
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.masked_agg_ref(cache, scales, mask)
+    return _ma.masked_agg(cache, scales, mask,
+                          interpret=(backend == "interpret"))
+
+
+def quantize_rows(x, backend=None):
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.quantize_rows_ref(x)
+    return _q.quantize_rows(x, interpret=(backend == "interpret"))
+
+
+def dequantize_rows(q, s, backend=None):
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.dequantize_rows_ref(q, s)
+    return _q.dequantize_rows(q, s, interpret=(backend == "interpret"))

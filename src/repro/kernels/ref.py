@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Semantics (all f32 accumulation):
+  * cache_row_update: fused ACE incremental rule on one cache row
+        u' = u + (g − c_row·old_scale)·(1/n)
+        c_row' = clip(round(g / new_scale))  (int8)
+  * masked_agg: ACED bounded-delay aggregation over the whole cache
+        u = Σ_i m_i·(C[i]·s_i) / max(Σ_i m_i, 1)
+  * quantize_rows / dequantize_rows: symmetric per-row int8.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def row_scale(g: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(jnp.max(jnp.abs(g), axis=-1), 1e-12) / INT8_MAX
+
+
+def cache_row_update_ref(u, g, c_row, old_scale, new_scale, inv_n):
+    """u,g (d,) f32; c_row (d,) int8; scalars old_scale,new_scale,inv_n.
+
+    u is updated with the *dequantized* new row (not raw g) so that
+    ``u == mean_i dq(C[i])`` stays an exact invariant (paper Alg. a.5
+    under F.3.3 compression)."""
+    old = c_row.astype(jnp.float32) * old_scale
+    q = jnp.clip(jnp.round(g / new_scale), -127, 127)
+    u_new = u + (q * new_scale - old) * inv_n
+    return u_new, q.astype(jnp.int8)
+
+
+def masked_agg_ref(cache, scales, mask):
+    """cache (n,d) int8; scales (n,) f32; mask (n,) bool -> (d,) f32."""
+    m = mask.astype(jnp.float32)
+    w = m * scales
+    acc = jnp.einsum("nd,n->d", cache.astype(jnp.float32), w)
+    return acc / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def quantize_rows_ref(x):
+    """x (n,d) f32 -> (q (n,d) int8, scales (n,) f32)."""
+    s = row_scale(x)
+    q = jnp.clip(jnp.round(x / s[:, None]), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_rows_ref(q, s):
+    return q.astype(jnp.float32) * s[:, None]

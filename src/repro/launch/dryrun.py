@@ -1,0 +1,366 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination on 512 forced host devices, record memory/cost/collective stats.
+
+MUST set XLA_FLAGS before any jax import — jax locks the device count on
+first init. Do not set this env var anywhere else (smoke tests and benches
+run on 1 device)."""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (ARCHS, afl_config, get_config, input_specs,
+                                    skip_reason, supports_shape)
+from repro.core.distributed import make_afl_train_step
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import sgd
+from repro.sharding.auto import (infer_afl_shardings, infer_batch_shardings,
+                                 infer_decode_cache_shardings,
+                                 infer_opt_shardings, infer_params_shardings)
+from repro.sharding.rules import use_rules
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic estimate from optimized HLO.
+
+    bytes(all-gather) = result (≈ received), bytes(all-reduce) = 2×size
+    (ring), bytes(reduce-scatter) = result×k (≈ operand read), a2a/permute =
+    result. k from replica_groups when parseable."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        size = _shape_bytes(dtype, dims)
+        k = 1
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if gm:
+            k = int(gm.group(2))
+        else:
+            gm = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+            if gm:
+                k = len(gm.group(1).split(","))
+        if kind == "all-gather":
+            out[kind] += size
+        elif kind == "all-reduce":
+            out[kind] += 2 * size
+        elif kind == "reduce-scatter":
+            out[kind] += size * max(k, 1)
+        else:
+            out[kind] += size
+    out["total"] = sum(out.values())
+    return out
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Lowering per mode
+# ---------------------------------------------------------------------------
+
+def lower_train(arch, shape, mesh, *, algo="ace", remat="full", lr=0.01,
+                cfg=None, fsdp=True, rules=None, cache_dtype=None):
+    cfg = cfg or get_config(arch, shape=shape.name, dtype="bfloat16")
+    model = build_model(cfg)
+    over = {"algorithm": algo}
+    if cache_dtype:
+        over["cache_dtype"] = cache_dtype
+    aflc = afl_config(arch, **over)
+    init_fn, step_fn = make_afl_train_step(
+        lambda p, b: model.loss_fn(p, b, remat=remat), aflc, sgd(lr))
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(model.init, key)
+    state_sds = jax.eval_shape(init_fn, params_sds)
+    batch_sds = input_specs(cfg, shape)["batch"]
+
+    state_sh = type(state_sds)(
+        params=infer_params_shardings(state_sds.params, mesh, fsdp=fsdp),
+        opt_state=infer_opt_shardings(state_sds.opt_state, mesh),
+        afl=infer_afl_shardings(state_sds.afl, mesh),
+        step=replicated(mesh))
+    batch_sh = infer_batch_shardings(batch_sds, mesh)
+    with mesh, use_rules(mesh, rules):
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_sh, replicated(mesh), replicated(mesh)),
+            donate_argnums=(0,),
+        ).lower(state_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered, cfg
+
+
+def lower_prefill(arch, shape, mesh, cfg=None):
+    cfg = cfg or get_config(arch, shape=shape.name, dtype="bfloat16")
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch_sds = input_specs(cfg, shape)["batch"]
+    params_sh = infer_params_shardings(params_sds, mesh)
+    batch_sh = infer_batch_shardings(batch_sds, mesh)
+    with mesh, use_rules(mesh):
+        lowered = jax.jit(
+            model.prefill, in_shardings=(params_sh, batch_sh),
+        ).lower(params_sds, batch_sds)
+    return lowered, cfg
+
+
+def lower_decode(arch, shape, mesh, cfg=None):
+    cfg = cfg or get_config(arch, shape=shape.name, dtype="bfloat16")
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = input_specs(cfg, shape)
+    params_sh = infer_params_shardings(params_sds, mesh)
+    cache_sh = infer_decode_cache_shardings(specs["cache"], mesh,
+                                            shape.global_batch)
+    tok_sh = infer_batch_shardings(specs["tokens"], mesh)
+    with mesh, use_rules(mesh):
+        lowered = jax.jit(
+            model.decode_step,
+            in_shardings=(params_sh, cache_sh, tok_sh, replicated(mesh)),
+            donate_argnums=(1,),
+        ).lower(params_sds, specs["cache"], specs["tokens"], specs["pos"])
+    return lowered, cfg
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: unrolled reduced-depth compiles, linearly extrapolated.
+# XLA's HloCostAnalysis counts while bodies once; the full production compile
+# proves lowering/memory, these probes recover honest flops/bytes/collectives.
+# ---------------------------------------------------------------------------
+
+def _with_reps(cfg, reps_per_stage, enc_reps):
+    stages = tuple((pat, r) for (pat, _), r in zip(cfg.stages, reps_per_stage))
+    nl = sum(len(p) * r for p, r in stages)
+    return dataclasses.replace(
+        cfg, stages=stages, num_layers=nl, scan_layers=False,
+        num_encoder_layers=enc_reps if cfg.is_encoder_decoder else 0)
+
+
+def _measure(lowered):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["total"], "coll_detail": coll}
+
+
+def probe_costs(arch, shape, mesh, *, algo="ace", remat="full",
+                **lower_kw) -> Dict:
+    """Measured flops/bytes/collectives, extrapolated to full depth."""
+    base_cfg = get_config(arch, shape=shape.name, dtype="bfloat16")
+    n_stage = len(base_cfg.stages)
+    reps_full = [r for _, r in base_cfg.stages]
+    enc_full = base_cfg.num_encoder_layers
+
+    def lower(cfg):
+        if shape.mode == "train":
+            lo, _ = lower_train(arch, shape, mesh, algo=algo, remat=remat,
+                                cfg=cfg, **lower_kw)
+        elif shape.mode == "prefill":
+            lo, _ = lower_prefill(arch, shape, mesh, cfg=cfg)
+        else:
+            lo, _ = lower_decode(arch, shape, mesh, cfg=cfg)
+        return lo
+
+    probes = []
+    base = _with_reps(base_cfg, [1] * n_stage, 1 if enc_full else 0)
+    p1 = _measure(lower(base))
+    probes.append(p1)
+    terms = {"flops": p1["flops"], "bytes": p1["bytes"], "coll": p1["coll"]}
+    for s in range(n_stage):
+        reps = [1] * n_stage
+        reps[s] = 2
+        p2 = _measure(lower(_with_reps(base_cfg, reps, 1 if enc_full else 0)))
+        for k in terms:
+            terms[k] += (reps_full[s] - 1) * (p2[k] - p1[k])
+    if enc_full:
+        p2 = _measure(lower(_with_reps(base_cfg, [1] * n_stage, 2)))
+        for k in terms:
+            terms[k] += (enc_full - 1) * (p2[k] - p1[k])
+    # linear extrapolation can go slightly negative on tiny terms — clamp
+    return {k: max(v, 0.0) for k, v in terms.items()}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod=False, algo="ace",
+            remat="full", keep_hlo: Optional[str] = None,
+            probes: bool = True, variant: str = "", **lower_kw) -> Dict:
+    shape = INPUT_SHAPES[shape_name]
+    if not supports_shape(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": skip_reason(arch, shape_name)}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    if shape.mode == "train":
+        lowered, cfg = lower_train(arch, shape, mesh, algo=algo, remat=remat,
+                                   **lower_kw)
+    elif shape.mode == "prefill":
+        lowered, cfg = lower_prefill(arch, shape, mesh)
+    else:
+        lowered, cfg = lower_decode(arch, shape, mesh)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if keep_hlo:
+        with open(keep_hlo, "w") as f:
+            f.write(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mode": shape.mode, "algo": algo if shape.mode == "train" else None,
+        "variant": variant, "chips": int(n_chips),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "raw_flops_per_chip": flops, "raw_bytes_per_chip": bytes_acc,
+        "raw_collective_bytes_per_chip": coll,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens": shape.global_batch * (1 if shape.mode == "decode"
+                                        else shape.seq_len),
+    }
+
+    # ---- honest cost terms -------------------------------------------
+    from repro.launch.analytic import analytic_costs
+    over = {"algorithm": algo}
+    if lower_kw.get("cache_dtype"):
+        over["cache_dtype"] = lower_kw["cache_dtype"]
+    aflc = afl_config(arch, **over) if shape.mode == "train" else None
+    ana = analytic_costs(cfg, shape, remat=remat, afl=aflc)
+    rec["analytic_flops_total"] = ana["flops"]
+    rec["analytic_bytes_total"] = ana["bytes"]
+    if probes and not multi_pod:
+        try:
+            pr = probe_costs(arch, shape, mesh, algo=algo, remat=remat,
+                             **lower_kw)
+            rec["probe_flops_per_chip"] = pr["flops"]
+            rec["probe_bytes_per_chip"] = pr["bytes"]
+            rec["probe_coll_per_chip"] = pr["coll"]
+        except Exception as e:
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+    # roofline terms (seconds/step, per chip):
+    #   compute from analytic flops (exact; HLO undercounts scanned bodies)
+    #   memory from the analytic HBM stream estimate (HLO "bytes accessed" is
+    #   pre-fusion logical traffic, 30-500x real: reported as cross-check)
+    #   collective from probe-extrapolated HLO traffic (fallback: raw)
+    flops_chip = ana["flops"] / n_chips
+    bytes_chip = ana["bytes"] / n_chips
+    coll_chip = rec.get("probe_coll_per_chip", coll["total"])
+    rec.update({
+        "t_compute": flops_chip / PEAK_FLOPS,
+        "t_memory": bytes_chip / HBM_BW,
+        "t_collective": coll_chip / ICI_BW,
+    })
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            try:
+                rec[k] = int(getattr(mem, k))
+            except Exception:
+                pass
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    model_flops = 6 * rec["active_params"] * rec["tokens"]
+    rec["model_flops"] = model_flops
+    rec["useful_flop_ratio"] = (model_flops / ana["flops"]
+                                if ana["flops"] else 0.0)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--algo", default="ace")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--keep-hlo", default=None)
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    t0 = time.time()
+                    try:
+                        rec = run_one(arch, shape, multi_pod=mp,
+                                      algo=args.algo, remat=args.remat,
+                                      keep_hlo=args.keep_hlo,
+                                      probes=not args.no_probes)
+                    except Exception as e:  # record failures, keep going
+                        rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                               "error": f"{type(e).__name__}: {e}"}
+                    rec["wall_s"] = round(time.time() - t0, 1)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    status = ("SKIP" if rec.get("skipped") else
+                              "FAIL" if rec.get("error") else "OK")
+                    print(f"[{status}] {arch} {shape} mp={mp} "
+                          f"({rec['wall_s']}s) {rec.get('error', '')}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

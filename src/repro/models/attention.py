@@ -1,0 +1,267 @@
+"""Attention: flash-style chunked GQA (memory O(L*block), not O(L^2)),
+sliding-window, cross-attention, single-token decode, and MLA
+(multi-head latent attention, MiniCPM3/DeepSeek-style) with absorbed decode.
+
+All softmax accumulation in f32. Pure JAX — TPU Pallas is reserved for the
+paper's server-side hot-spots (see repro/kernels)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm, softcap
+from repro.sharding.rules import shard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal=True, window=0, softcap_val=0.0,
+                      q_offset=0, q_block=512, kv_block=512):
+    """q (B,Lq,H,D), k (B,Lk,Hkv,D), v (B,Lk,Hkv,Dv) -> (B,Lq,H,Dv).
+
+    Online-softmax over kv blocks; scans over q blocks. GQA via grouped einsum
+    (no materialized head repeat). ``window`` > 0 limits attention to the last
+    `window` positions (inclusive of self)."""
+    B, Lq, H, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    rep = H // Hkv
+    scale = D ** -0.5
+
+    qb = min(q_block, Lq)
+    kb = min(kv_block, Lk)
+    pad_q = (-Lq) % qb
+    pad_k = (-Lk) % kb
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (Lq + pad_q) // qb, (Lk + pad_k) // kb
+
+    # (n, B, blk, Hkv, rep/1, D)
+    qs = q.reshape(B, nq, qb, Hkv, rep, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kb, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+
+    kv_pos = jnp.arange(nk * kb).reshape(nk, kb)
+    kv_valid = kv_pos < Lk
+
+    def q_step(_, inputs):
+        qi, qblk = inputs
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kblk, vblk, kpos, kval = kv_in
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap_val:
+                s = softcap(s, softcap_val)
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, rep, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, qb, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (ks, vs, kv_pos, kv_valid))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, qb, Hkv, rep, Dv)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, H, Dv)
+    return out[:, :Lq].astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *, softcap_val=0.0):
+    """Single-position attention. q (B,H,D); caches (B,S,Hkv,D/Dv);
+    valid_mask (B,S) bool."""
+    B, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    if softcap_val:
+        s = softcap(s, softcap_val)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, v_cache.shape[-1]).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, kv_x, cos, sin, cfg, *, rope_kv=True):
+    B, L, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, L, cfg.num_heads, hd)
+    src = x if kv_x is None else kv_x
+    Lk = src.shape[1]
+    k = (src @ params["wk"]).reshape(B, Lk, cfg.num_kv_heads, hd)
+    v = (src @ params["wv"]).reshape(B, Lk, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        if rope_kv:
+            k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_apply(params, x, cos, sin, cfg, *, causal=True, window=0, kv_x=None,
+               return_kv=False):
+    """Training / prefill self- or cross-attention."""
+    q, k, v = _project_qkv(params, x, kv_x, cos, sin, cfg,
+                           rope_kv=kv_x is None)
+    q = shard(q, ("batch", "seq", "heads", None))
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            softcap_val=cfg.attn_softcap)
+    B, L = x.shape[:2]
+    y = out.reshape(B, L, -1) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_decode(params, x, cos, sin, cache, pos, cfg, *, window=0):
+    """x (B,1,d); cache {"k","v"} (B,S,Hkv,hd) where S = min(window, max_len)
+    if window else max_len; pos scalar int32 (tokens already in cache)."""
+    q, k, v = _project_qkv(params, x, None, cos, sin, cfg)
+    k_cache, v_cache = cache["k"], cache["v"]
+    S = k_cache.shape[1]
+    slot = (pos % S) if window else jnp.minimum(pos, S - 1)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+    n_valid = jnp.minimum(pos + 1, S)
+    idx = jnp.arange(S)
+    valid = jnp.broadcast_to((idx < n_valid)[None], (x.shape[0], S))
+    out = decode_attention(q[:, 0], k_cache, v_cache, valid,
+                           softcap_val=cfg.attn_softcap)
+    y = out.reshape(x.shape[0], 1, -1) @ params["wo"]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype):
+    d = cfg.d_model
+    H, nd, rd, vd = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    keys = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(keys[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "w_uq": dense_init(keys[1], cfg.q_lora_rank, H * (nd + rd), dtype),
+        "w_dkv": dense_init(keys[2], d, cfg.kv_lora_rank, dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "w_kr": dense_init(keys[3], d, rd, dtype),
+        "w_uk": dense_init(keys[4], cfg.kv_lora_rank, H * nd, dtype),
+        "w_uv": dense_init(keys[5], cfg.kv_lora_rank, H * vd, dtype),
+        "wo": dense_init(keys[6], H * vd, d, dtype),
+    }
+
+
+def _mla_q(params, x, cos, sin, cfg):
+    B, L, _ = x.shape
+    H, nd, rd = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    ql = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
+    q = (ql @ params["w_uq"]).reshape(B, L, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, x, cos, sin, cfg):
+    latent = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    k_rope = (x @ params["w_kr"])[:, :, None, :]          # (B,L,1,rd) shared
+    k_rope = apply_rope(k_rope, cos, sin)
+    return latent, k_rope
+
+
+def mla_apply(params, x, cos, sin, cfg, *, causal=True, window=0):
+    """Training/prefill: decompress latents to full K/V, run chunked attention."""
+    B, L, _ = x.shape
+    H, nd, rd, vd = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(params, x, cos, sin, cfg)
+    latent, k_rope = _mla_latent(params, x, cos, sin, cfg)
+    k_nope = (latent @ params["w_uk"]).reshape(B, L, H, nd)
+    v = (latent @ params["w_uv"]).reshape(B, L, H, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, L, H, rd))], axis=-1)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            softcap_val=cfg.attn_softcap)
+    return out.reshape(B, L, -1) @ params["wo"]
+
+
+def mla_decode(params, x, cos, sin, cache, pos, cfg):
+    """Absorbed decode: scores and values live in latent space; the KV cache is
+    (B,S,kv_rank) + (B,S,rd) — the MLA memory win."""
+    B = x.shape[0]
+    H, nd, rd, vd = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    R = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(params, x, cos, sin, cfg)        # (B,1,H,*)
+    latent, k_rope = _mla_latent(params, x, cos, sin, cfg)   # (B,1,R), (B,1,1,rd)
+    lat_c = jax.lax.dynamic_update_slice(cache["latent"],
+                                         latent.astype(cache["latent"].dtype),
+                                         (0, pos, 0))
+    kr_c = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                        k_rope[:, :, 0].astype(cache["k_rope"].dtype),
+                                        (0, pos, 0))
+    S = lat_c.shape[1]
+    w_uk = params["w_uk"].reshape(R, H, nd)
+    # absorb: q into latent space
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)   # (B,H,R)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, lat_c, preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], kr_c,
+                      preferred_element_type=jnp.float32)) * ((nd + rd) ** -0.5)
+    valid = (jnp.arange(S) <= pos)[None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", p.astype(lat_c.dtype), lat_c)  # (B,H,R)
+    w_uv = params["w_uv"].reshape(R, H, vd)
+    v = jnp.einsum("bhr,rhv->bhv", ctx, w_uv)
+    y = v.reshape(B, 1, H * vd) @ params["wo"]
+    return y, {"latent": lat_c, "k_rope": kr_c}

@@ -1,0 +1,124 @@
+"""Primitive layers: norms, rotary embeddings (standard + M-RoPE), MLP, softcap.
+
+Pure-functional: each layer is (init_fn, apply_fn) operating on param dicts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    stddev = scale / np.sqrt(max(shape[0], 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=1.0):
+    return truncated_normal_init(key, (d_in, d_out), scale, dtype)
+
+
+# When True, rms_norm keeps the activation tensor in its compute dtype and
+# upcasts only the variance *reduction* to f32. Why this exists: with the
+# default full-f32 norm, XLA hoists the tensor-parallel partial-sum all-reduce
+# past the f32 upcast, so the dominant activation all-reduce moves 2x the
+# bytes (see EXPERIMENTS.md §Perf). Toggled per-variant by the hillclimb.
+LOWP_NORM = False
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    if LOWP_NORM and dt != jnp.float32:
+        var = (jnp.einsum("...d,...d->...", x, x,
+                          preferred_element_type=jnp.float32)
+               / x.shape[-1])[..., None]
+        inv = jax.lax.rsqrt(var + eps).astype(dt)
+        return x * inv * (1.0 + scale.astype(jnp.float32)).astype(dt)
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions, head_dim, theta):
+    """positions (..., L) int -> cos/sin (..., L, head_dim//2) f32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions3, head_dim, theta, sections):
+    """M-RoPE (Qwen2-VL): positions3 (B, 3, L) -> cos/sin (B, L, head_dim//2).
+
+    The head_dim//2 frequency dims are split into (temporal, height, width)
+    sections; each section indexes its own position stream.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    sec_id = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                              for i, s in enumerate(sections)])  # (half,)
+    # pick the position stream per frequency dim: (B, L, half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32).transpose(0, 2, 1),       # (B, L, 3)
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions3.shape[:1] + (positions3.shape[-1], half)),
+        axis=-1)
+    ang = pos * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, L, H, D); cos/sin (B, L, D//2). Rotate-half (llama convention)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params, x):
+    h = jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, dtype):
+    return {"embedding": truncated_normal_init(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embed_apply(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed_apply(params, x, *, logit_softcap=0.0):
+    logits = x @ params["embedding"].T
+    return softcap(logits, logit_softcap)

@@ -1,0 +1,193 @@
+"""Top-level model API: build_model(cfg) -> Model with
+init / forward / loss / prefill / init_cache / decode_step.
+
+Batch conventions
+-----------------
+train / prefill:
+  {"tokens": (B, Lt) i32, "targets": (B, L) i32 (train only; -1 = ignore),
+   "vision_embeds": (B, Np, d)           [vlm; L = Np + Lt]
+   "positions3": (B, 3, L) i32           [vlm M-RoPE]
+   "audio_embeds": (B, Ls, d)}           [audio enc-dec]
+decode:
+  decode_step(params, cache, tokens (B,) i32, pos scalar i32) -> (logits, cache)
+  enc-dec decode additionally reads cache["cross"] (per-layer projected K/V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, SHARED_ATTN, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import transformer as tf
+from repro.models.layers import (embed_apply, embed_init, mrope_angles,
+                                 rms_norm, rope_angles, unembed_apply)
+from repro.sharding.rules import shard
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable       # (params, batch, remat="none") -> (logits, aux)
+    loss_fn: Callable       # (params, batch, remat=...) -> scalar
+    prefill: Callable       # (params, batch) -> (last_logits, cache)
+    init_cache: Callable    # (params?, batch_size, max_len) -> cache
+    decode_step: Callable   # (params, cache, tokens, pos) -> (logits, cache)
+
+
+def _rope_dim(cfg: ModelConfig) -> int:
+    return cfg.qk_rope_head_dim if cfg.use_mla else cfg.head_dim
+
+
+def _angles(cfg, batch, B, L, offset=0):
+    if cfg.attention_free:
+        return None, None
+    if cfg.rope_mode == "mrope" and batch is not None and "positions3" in batch:
+        return mrope_angles(batch["positions3"], _rope_dim(cfg), cfg.rope_theta,
+                            cfg.mrope_sections)
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None] + offset, (B, L))
+    return rope_angles(pos, _rope_dim(cfg), cfg.rope_theta)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    has_shared = any(SHARED_ATTN in p for p, _ in cfg.stages)
+
+    # ---------------- init ------------------------------------------------
+    def init(rng):
+        keys = jax.random.split(rng, len(cfg.stages) + 4)
+        params: Dict[str, Any] = {
+            "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+        params["stages"] = [
+            tf.stage_init(k, pattern, reps, cfg, dtype,
+                          cross=cfg.is_encoder_decoder)
+            for k, (pattern, reps) in zip(keys[1:], cfg.stages)]
+        if has_shared:
+            params["shared_block"] = tf._attn_block_init(
+                keys[-3], cfg, dtype, cross=False)
+        if cfg.is_encoder_decoder:
+            params["encoder"] = {
+                "stage": tf.stage_init(keys[-2], (ATTN,), cfg.num_encoder_layers,
+                                       cfg, dtype),
+                "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            }
+        return params
+
+    # ---------------- shared helpers --------------------------------------
+    def _embed_inputs(params, batch):
+        """Returns (h (B, L, d), L)."""
+        tok = batch["tokens"]
+        h = embed_apply(params["embed"], tok) * math.sqrt(cfg.d_model)
+        h = h.astype(dtype)
+        if cfg.frontend == "vision" and "vision_embeds" in batch:
+            h = jnp.concatenate([batch["vision_embeds"].astype(dtype), h], axis=1)
+        return shard(h, ("batch", "seq", "embed"))
+
+    def _run_encoder(params, batch, remat):
+        src = batch["audio_embeds"].astype(dtype)
+        B, Ls, _ = src.shape
+        cos, sin = _angles(cfg, None, B, Ls)
+        h, _, _ = tf.stage_apply(params["encoder"]["stage"], (ATTN,), src, cos,
+                                 sin, cfg, causal=False, remat=remat)
+        return rms_norm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    def _run_stages(params, h, cos, sin, *, enc_out=None, remat="none",
+                    return_cache=False):
+        shared = params.get("shared_block")
+        aux_total = 0.0
+        caches = []
+        for sp, (pattern, _) in zip(params["stages"], cfg.stages):
+            h, aux, cache = tf.stage_apply(
+                sp, pattern, h, cos, sin, cfg, causal=True, enc_out=enc_out,
+                shared=shared, remat=remat, return_cache=return_cache)
+            aux_total = aux_total + aux
+            caches.append(cache)
+        return h, aux_total, caches
+
+    # ---------------- forward / loss --------------------------------------
+    def forward(params, batch, remat="none"):
+        enc_out = (_run_encoder(params, batch, remat)
+                   if cfg.is_encoder_decoder else None)
+        h = _embed_inputs(params, batch)
+        B, L, _ = h.shape
+        cos, sin = _angles(cfg, batch, B, L)
+        h, aux, _ = _run_stages(params, h, cos, sin, enc_out=enc_out,
+                                remat=remat)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed_apply(params["embed"], h,
+                               logit_softcap=cfg.logit_softcap)
+        return logits, aux
+
+    def loss_fn(params, batch, remat="none"):
+        logits, aux = forward(params, batch, remat=remat)
+        targets = batch["targets"]
+        mask = (targets >= 0).astype(jnp.float32)
+        tgt = jnp.maximum(targets, 0)
+        logits = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0] - logz
+        loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + cfg.router_aux_weight * aux
+
+    # ---------------- serving ---------------------------------------------
+    def init_cache(batch_size: int, max_len: int):
+        caches = [tf.stage_cache_init(pattern, reps, cfg, batch_size, max_len,
+                                      dtype)
+                  for pattern, reps in cfg.stages]
+        out = {"layers": caches}
+        if cfg.is_encoder_decoder:
+            # projected encoder K/V per decoder layer (filled at prefill)
+            def kv(reps):
+                S = max(1, max_len // cfg.encoder_frames_ratio)
+                z = jnp.zeros((batch_size, S, cfg.num_kv_heads, cfg.head_dim),
+                              dtype)
+                return jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape),
+                    ({"k": z, "v": z},))
+            out["cross"] = [kv(reps) for _, reps in cfg.stages]
+        return out
+
+    def prefill(params, batch):
+        enc_out = (_run_encoder(params, batch, "none")
+                   if cfg.is_encoder_decoder else None)
+        h = _embed_inputs(params, batch)
+        B, L, _ = h.shape
+        cos, sin = _angles(cfg, batch, B, L)
+        h, _, caches = _run_stages(params, h, cos, sin, enc_out=enc_out,
+                                   return_cache=True)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed_apply(params["embed"], h[:, -1:],
+                               logit_softcap=cfg.logit_softcap)
+        return logits[:, 0], caches
+
+    def decode_step(params, cache, tokens, pos):
+        B = tokens.shape[0]
+        h = embed_apply(params["embed"], tokens[:, None]) * math.sqrt(cfg.d_model)
+        h = h.astype(dtype)
+        if not cfg.attention_free:
+            p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+            cos, sin = rope_angles(p, _rope_dim(cfg), cfg.rope_theta)
+        else:
+            cos = sin = None
+        shared = params.get("shared_block")
+        new_layer_caches = []
+        for i, (sp, (pattern, _)) in enumerate(zip(params["stages"], cfg.stages)):
+            cross = cache["cross"][i] if cfg.is_encoder_decoder else None
+            h, nc = tf.stage_decode(sp, pattern, h, cos, sin,
+                                    cache["layers"][i], pos, cfg,
+                                    shared=shared, cross_caches=cross)
+            new_layer_caches.append(nc)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed_apply(params["embed"], h[:, 0],
+                               logit_softcap=cfg.logit_softcap)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+        return logits, new_cache
+
+    return Model(cfg, init, forward, loss_fn, prefill, init_cache, decode_step)

@@ -1,0 +1,174 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+("attention-like") term computed on the MXU + inter-chunk recurrent state
+passed with ``lax.scan`` — the TPU-idiomatic mapping of the paper's SSD
+decomposition. Decode is the O(1) single-step recurrence on a persistent
+(H, P, N) state plus a depthwise-conv ring cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding.rules import shard
+
+
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    di, N, H, G, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_conv
+    conv_ch = di + 2 * G * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, d, 2 * di + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (K, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -4.6, jnp.float32),   # softplus ~ 0.01
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(k4, di, d, dtype),
+    }
+
+
+def _split_zxbcdt(zxbcdt, cfg):
+    di, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * G * N]
+    dt = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over L. xBC (B,L,C); w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """a (..., Q) -> (..., Q, Q) with L[l, s] = sum_{i in (s, l]} a_i (l >= s)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    dif = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, dif, -jnp.inf)
+
+
+def ssd_chunked(x, a, Bm, Cm, cfg, init_state=None):
+    """Chunked SSD scan.
+
+    x  (B, L, H, P)   head inputs (already scaled by dt)
+    a  (B, L, H)      log-decay per step (dt * A, negative)
+    Bm, Cm (B, L, G, N)
+    returns y (B, L, H, P), final_state (B, H, P, N)
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Hg = H // G
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xr = x.reshape(Bsz, nc, Q, G, Hg, P)
+    ar = a.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Br = Bm.reshape(Bsz, nc, Q, G, N)
+    Cr = Cm.reshape(Bsz, nc, Q, G, N)
+
+    a_cum = jnp.cumsum(ar, axis=2)                                  # (B,nc,Q,H)
+    Lmat = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))               # (B,nc,H,Q,Q)
+    Lmat = Lmat.reshape(Bsz, nc, G, Hg, Q, Q)
+
+    # intra-chunk (diagonal) term
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cr, Br,
+                    preferred_element_type=jnp.float32)             # (B,nc,G,Q,Q)
+    scores = CB[:, :, :, None] * Lmat                               # (B,nc,G,Hg,Q,Q)
+    y_diag = jnp.einsum("bcghls,bcsghp->bclghp", scores.astype(x.dtype), xr)
+
+    # chunk-final states
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)             # (B,nc,Q,H)
+    xd = xr * decay_states.reshape(Bsz, nc, Q, G, Hg)[..., None].astype(x.dtype)
+    states = jnp.einsum("bcsgn,bcsghp->bcghpn", Br, xd)             # (B,nc,G,Hg,P,N)
+
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :]).reshape(Bsz, nc, G, Hg)
+
+    def step(carry, inp):
+        st, dec = inp
+        prev = carry
+        new = prev * dec[..., None, None].astype(prev.dtype) + st
+        return new, prev
+
+    if init_state is None:
+        s0 = jnp.zeros((Bsz, G, Hg, P, N), x.dtype)
+    else:
+        s0 = init_state.reshape(Bsz, G, Hg, P, N)
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4, 5),
+                   chunk_decay.transpose(1, 0, 2, 3)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)           # (B,nc,G,Hg,P,N)
+
+    # inter-chunk (off-diagonal) term
+    state_decay = jnp.exp(a_cum).reshape(Bsz, nc, Q, G, Hg)
+    y_off = jnp.einsum("bclgn,bcghpn,bclgh->bclghp", Cr, prev_states.astype(jnp.float32),
+                       state_decay).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y, final.reshape(Bsz, H, P, N)
+
+
+def mamba_apply(params, x, cfg):
+    """Full-sequence Mamba2 block. x (B, L, d) -> (B, L, d)."""
+    B, L, d = x.shape
+    di, N, G, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_zxbcdt(x @ params["in_proj"], cfg)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xp = xBC[..., :di].reshape(B, L, H, P)
+    Bm = xBC[..., di:di + G * N].reshape(B, L, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (B,L,H)
+    A = -jnp.exp(params["A_log"])                                       # (H,)
+    xp = shard(xp, ("batch", "seq", "ssm_heads", None))
+    y, _ = ssd_chunked(xp * dt[..., None].astype(x.dtype), dt * A, Bm, Cm, cfg)
+    y = y + xp * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, L, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def mamba_init_cache(cfg, batch, dtype):
+    di, N, G, H, P, K = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                         cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv)
+    conv_ch = di + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, K - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, cache, cfg):
+    """Single-step recurrence. x (B, 1, d) -> (y (B,1,d), cache)."""
+    B = x.shape[0]
+    di, N, G, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_zxbcdt((x @ params["in_proj"])[:, 0], cfg)      # (B, *)
+    conv_buf = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)   # (B,K,C)
+    new_conv = conv_buf[:, 1:]
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_buf, params["conv_w"])
+                      + params["conv_b"])
+    xp = xBC[..., :di].reshape(B, H, P)
+    Bm = xBC[..., di:di + G * N].reshape(B, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                             # (B,H)
+    Hg = H // G
+    xdt = (xp * dt[..., None].astype(xp.dtype)).reshape(B, G, Hg, P)
+    upd = jnp.einsum("bgn,bghp->bghpn", Bm, xdt).reshape(B, H, P, N)
+    state = cache["state"] * decay[..., None, None] + upd.astype(jnp.float32)
+    y = jnp.einsum("bghpn,bgn->bghp", state.reshape(B, G, Hg, P, N),
+                   Cm.astype(jnp.float32)).reshape(B, H, P)
+    y = y.astype(x.dtype) + xp * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    y = (y @ params["out_proj"])[:, None]
+    return y, {"conv": new_conv, "state": state}

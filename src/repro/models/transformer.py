@@ -1,0 +1,227 @@
+"""Config-driven transformer stack.
+
+A model is a sequence of *stages*; each stage is (pattern, repeats) where the
+pattern is a tuple of layer kinds. Each stage lowers as ``lax.scan`` over its
+repeats (one traced unit), keeping HLO size ~O(#stages) instead of O(#layers)
+— essential for 512-way SPMD partitioning on a single-core CPU dry-run host.
+
+Supported kinds: attn, attn_local (sliding window), mamba (SSD), shared_attn
+(Zamba2-style shared-parameter attention+MLP unit). Dense FFN / MoE FFN and
+MLA vs GQA are chosen from the config. Encoder-decoder adds a bidirectional
+encoder stack and per-decoder-layer cross-attention."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, SHARED_ATTN, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (embed_apply, embed_init, mlp_apply, mlp_init,
+                                 mrope_angles, rms_norm, rope_angles,
+                                 unembed_apply)
+from repro.sharding.rules import shard
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg: ModelConfig, dtype, *, cross: bool):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.use_mla:
+        p["attn"] = attn_lib.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn_lib.attn_init(ks[0], cfg, dtype)
+    if cfg.is_moe:
+        p["ffn"] = moe_lib.moe_init(ks[1], cfg, dtype)
+        if cfg.dense_residual:
+            p["dense_ffn"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if cross:
+        p["ln_c"] = jnp.zeros((cfg.d_model,), dtype)
+        p["cross"] = attn_lib.attn_init(ks[3], cfg, dtype)
+    return p
+
+
+def block_init(key, kind: str, cfg: ModelConfig, dtype, *, cross: bool = False):
+    if kind == MAMBA:
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "mamba": ssm_lib.mamba_init(key, cfg, dtype)}
+    if kind == SHARED_ATTN:
+        return {}            # parameters live at model level (shared)
+    return _attn_block_init(key, cfg, dtype, cross=cross)
+
+
+def cfg_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _ffn_apply(params, x, cfg):
+    if cfg.is_moe:
+        y, aux = moe_lib.moe_apply(params["ffn"], x, cfg)
+        if cfg.dense_residual:
+            y = y + mlp_apply(params["dense_ffn"], x)
+        return y, aux
+    return mlp_apply(params["ffn"], x), 0.0
+
+
+def block_apply(params, kind, x, cos, sin, cfg, *, causal=True, enc_out=None,
+                shared=None, return_cache=False):
+    """Full-sequence (train / prefill) block. Returns (x, aux, cache|None)."""
+    if kind == MAMBA:
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        y = ssm_lib.mamba_apply(params["mamba"], h, cfg)
+        return x + y, 0.0, None
+    if kind == SHARED_ATTN:
+        params = shared
+    window = cfg.window_size if kind in (ATTN_LOCAL, SHARED_ATTN) else 0
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    cache = None
+    if cfg.use_mla:
+        y = attn_lib.mla_apply(params["attn"], h, cos, sin, cfg, causal=causal,
+                               window=window)
+    else:
+        if return_cache:
+            y, kv = attn_lib.attn_apply(params["attn"], h, cos, sin, cfg,
+                                        causal=causal, window=window,
+                                        return_kv=True)
+            cache = kv
+        else:
+            y = attn_lib.attn_apply(params["attn"], h, cos, sin, cfg,
+                                    causal=causal, window=window)
+    x = x + y
+    if enc_out is not None:
+        h = rms_norm(x, params["ln_c"], cfg.norm_eps)
+        y = attn_lib.attn_apply(params["cross"], h, None, None, cfg,
+                                causal=False, kv_x=enc_out)
+        x = x + y
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    y, aux = _ffn_apply(params, h, cfg)
+    x = shard(x + y, ("batch", "seq", "embed"))
+    return x, aux, cache
+
+
+def block_decode(params, kind, x, cos, sin, cache, pos, cfg, *, shared=None,
+                 cross_cache=None):
+    """Single-token decode. x (B,1,d). Returns (x, new_cache)."""
+    if kind == MAMBA:
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        y, new_cache = ssm_lib.mamba_decode(params["mamba"], h, cache, cfg)
+        return x + y, new_cache
+    if kind == SHARED_ATTN:
+        params = shared
+    window = cfg.window_size if kind in (ATTN_LOCAL, SHARED_ATTN) else 0
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        y, new_cache = attn_lib.mla_decode(params["attn"], h, cos, sin, cache,
+                                           pos, cfg)
+    else:
+        y, new_cache = attn_lib.attn_decode(params["attn"], h, cos, sin, cache,
+                                            pos, cfg, window=window)
+    x = x + y
+    if cross_cache is not None:
+        h = rms_norm(x, params["ln_c"], cfg.norm_eps)
+        B = x.shape[0]
+        hd = cfg.head_dim
+        q = (h @ params["cross"]["wq"]).reshape(B, 1, cfg.num_heads, hd)
+        valid = jnp.ones((B, cross_cache["k"].shape[1]), bool)
+        y = attn_lib.decode_attention(q[:, 0], cross_cache["k"],
+                                      cross_cache["v"], valid)
+        x = x + y.reshape(B, 1, -1) @ params["cross"]["wo"]
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    y, _ = _ffn_apply(params, h, cfg)
+    return x + y, new_cache
+
+
+def block_cache_init(kind, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if kind == MAMBA:
+        return ssm_lib.mamba_init_cache(cfg, batch, dtype)
+    S = max_len
+    if kind in (ATTN_LOCAL, SHARED_ATTN) and cfg.window_size:
+        S = min(cfg.window_size, max_len)
+    if cfg.use_mla:
+        return {"latent": jnp.zeros((batch, S, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, S, cfg.qk_rope_head_dim), dtype)}
+    return {"k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Stage (scan over repeated pattern units)
+# ---------------------------------------------------------------------------
+
+def stage_init(key, pattern, repeats, cfg, dtype, *, cross=False):
+    def unit(k):
+        ks = jax.random.split(k, len(pattern))
+        return tuple(block_init(kk, kind, cfg, dtype, cross=cross)
+                     for kk, kind in zip(ks, pattern))
+    return jax.vmap(unit)(jax.random.split(key, repeats))
+
+
+def stage_apply(stage_params, pattern, x, cos, sin, cfg, *, causal=True,
+                enc_out=None, shared=None, remat="full", return_cache=False):
+    def unit(carry, unit_params):
+        h, aux = carry
+        caches = []
+        for bp, kind in zip(unit_params, pattern):
+            h, a, c = block_apply(bp, kind, h, cos, sin, cfg, causal=causal,
+                                  enc_out=enc_out, shared=shared,
+                                  return_cache=return_cache)
+            aux = aux + a
+            caches.append(c)
+        return (h, aux), tuple(caches) if return_cache else None
+
+    if remat == "full":
+        unit = jax.checkpoint(unit, prevent_cse=False)
+    elif remat == "dots":
+        unit = jax.checkpoint(
+            unit, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    (x, aux), caches = jax.lax.scan(unit, (x, 0.0), stage_params,
+                                    unroll=not cfg.scan_layers)
+    return x, aux, caches
+
+
+def stage_decode(stage_params, pattern, x, cos, sin, stage_cache, pos, cfg,
+                 *, shared=None, cross_caches=None):
+    has_cross = cross_caches is not None
+
+    def unit(h, xs):
+        if has_cross:
+            unit_params, unit_cache, unit_cross = xs
+        else:
+            unit_params, unit_cache = xs
+            unit_cross = (None,) * len(pattern)
+        new_caches = []
+        for i, (bp, kind) in enumerate(zip(unit_params, pattern)):
+            h, nc = block_decode(bp, kind, h, cos, sin, unit_cache[i], pos,
+                                 cfg, shared=shared, cross_cache=unit_cross[i])
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    xs = (stage_params, stage_cache)
+    if has_cross:
+        xs = xs + (cross_caches,)
+    x, new_cache = jax.lax.scan(unit, x, xs, unroll=not cfg.scan_layers)
+    return x, new_cache
+
+
+def stage_cache_init(pattern, repeats, cfg, batch, max_len, dtype):
+    def one(_):
+        return tuple(block_cache_init(kind, cfg, batch, max_len, dtype)
+                     for kind in pattern)
+    leaves = one(None)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (repeats,) + a.shape),
+                        leaves)
+
+
+def stage_params_len(stage_params) -> int:
+    return jax.tree.leaves(stage_params)[0].shape[0]

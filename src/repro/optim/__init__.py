@@ -1,0 +1,2 @@
+from repro.optim.optim import (Optimizer, adamw, cosine_schedule, sgd,
+                               sgd_momentum, sqrt_nt_schedule)

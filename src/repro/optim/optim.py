@@ -1,0 +1,96 @@
+"""Optimizers (functional, pytree-based) and LR schedules.
+
+The paper's server update is plain SGD (w ← w − η·u) with η ∝ √(n/T)
+(Theorem a.2); local client steps use SGD-momentum / AdamW. All three are
+provided; the distributed AFL step composes any of them with the aggregated
+update u."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda t: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        eta = lr_fn(state["step"])
+        upd = jax.tree.map(lambda g: -eta * g, grads)
+        return upd, {"step": state["step"] + 1}
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr, momentum=0.9, nesterov=False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda t: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        eta = lr_fn(state["step"])
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -eta * (momentum * m + g), mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -eta * m, mu)
+        return upd, {"step": state["step"] + 1, "mu": mu}
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda t: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        eta = lr_fn(t)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            step = m_ / bc1 / (jnp.sqrt(v_ / bc2) + eps)
+            return (-eta * (step + weight_decay * p.astype(jnp.float32))
+                    ).astype(p.dtype)
+        return (jax.tree.map(upd, m, v, params),
+                {"step": t, "m": m, "v": v})
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def sqrt_nt_schedule(c: float, n: int, T: int):
+    """Paper Theorem a.2: η = c·√(n/T), constant over the run."""
+    eta = c * (n / T) ** 0.5
+    return lambda t: eta
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        warm = peak * t / jnp.maximum(warmup, 1)
+        prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(t < warmup, warm, cos)
+    return fn

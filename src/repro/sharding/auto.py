@@ -1,0 +1,179 @@
+"""Automatic sharding inference: leaf-path-name rules -> PartitionSpec.
+
+Canonical 2-D layout (single pod): TP over `model`, FSDP over `data`;
+multi-pod adds `pod` to the batch axes. All rules are divisibility-guarded:
+a dim that doesn't divide its axis product is replicated instead (so reduced
+smoke configs and B=1 decode shapes lower cleanly).
+
+Rules (in/out projection convention):
+  embedding (V, d)                  -> (model, data)
+  in-proj   (d_in, d_out)           -> (data, model)   wq/wk/wv/wi_*/w_d*/w_u*/in_proj/router
+  out-proj  (d_in, d_out)           -> (model, data)   wo/out_proj
+  conv      (K, C)                  -> (None, model)
+  1-D / scalars                     -> replicated
+  extra leading dims (layer-stacks, expert dims, cache client rows) -> None
+  KV caches (B, S, H, D)            -> (batch | None, data-if-B-unsharded, model-on-H, None)
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+IN_PROJ = {"wq", "wk", "wv", "wi_gate", "wi_up", "w_dq", "w_uq", "w_dkv",
+           "w_kr", "w_uk", "w_uv", "in_proj", "router", "w1", "w2", "w"}
+OUT_PROJ = {"wo", "out_proj"}
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape.get(n, 1)
+        return out
+    return mesh.shape.get(name, 1)
+
+
+def _guard(mesh: Mesh, shape, spec) -> P:
+    fixed = []
+    used = set()
+    for dim, s in zip(shape, spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        names = tuple(n for n in names if n in mesh.axis_names and n not in used)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if names and dim % size == 0:
+            fixed.append(names if len(names) > 1 else names[0])
+            used.update(names)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+def _leaf_name(path) -> str:
+    for part in reversed(path):
+        s = getattr(part, "key", None)
+        if isinstance(s, str):
+            return s
+        if s is not None:
+            return str(s)
+    return ""
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def param_spec(path, leaf, mesh: Mesh, *, fsdp: bool = True) -> P:
+    name = _leaf_name(path)
+    nd = jnp.ndim(leaf)
+    shape = jnp.shape(leaf)
+    if name == "embedding":
+        base = ("model", "data")
+    elif name in IN_PROJ:
+        base = ("data", "model")
+    elif name in OUT_PROJ:
+        base = ("model", "data")
+    elif name == "conv_w":
+        base = (None, "model")
+    else:
+        base = ()
+    base = tuple(base)
+    if not fsdp:  # pure tensor-parallel: drop the data-axis FSDP shard
+        base = tuple(None if b == "data" else b for b in base)
+    if len(base) > nd:
+        base = base[-nd:] if nd else ()
+    spec = (None,) * (nd - len(base)) + base
+    return _guard(mesh, shape, spec)
+
+
+def cache_spec(path, leaf, mesh: Mesh, batch_sharded: bool) -> P:
+    """KV/SSM/latent cache leaves. Leading dims may include a layer-stack dim."""
+    nd = jnp.ndim(leaf)
+    shape = jnp.shape(leaf)
+    b_axes = _batch_axes(mesh)
+    name = _leaf_name(path)
+    if name in ("k", "v"):             # (..., B, S, H, D)
+        core = [b_axes, None, "model", None]
+    elif name == "latent":             # (..., B, S, R)
+        core = [b_axes, None, "model"]
+    elif name == "k_rope":             # (..., B, S, rd)
+        core = [b_axes, None, None]
+    elif name == "state":              # (..., B, H, P, N)
+        core = [b_axes, "model", None, None]
+    elif name == "conv":               # (..., B, K-1, C)
+        core = [b_axes, None, "model"]
+    else:
+        core = [None] * nd
+    if not batch_sharded:
+        # B=1 decode: push the shard onto the sequence dim instead
+        if name in ("k", "v", "latent", "k_rope"):
+            core[0], core[1] = None, "data"
+        else:
+            core[0] = None
+    spec = [None] * (nd - len(core)) + core
+    return _guard(mesh, shape, spec[:nd])
+
+
+def infer_params_shardings(params, mesh: Mesh, *, fsdp: bool = True):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_spec(p, x, mesh, fsdp=fsdp)),
+        params)
+
+
+def infer_afl_shardings(afl_state, mesh: Mesh):
+    """Cache trees {"q": (n, *param), "scale": (n,)} + running means like params."""
+    def spec(path, x):
+        name = _leaf_name(path)
+        keys = [getattr(p, "key", None) for p in path]
+        nd = jnp.ndim(x)
+        if name == "scale" or nd <= 1:
+            return NamedSharding(mesh, P())
+        if "cache" in keys or "h" in keys:
+            # (n_clients, *param_dims): param rule on trailing dims
+            inner = param_spec(
+                path, jax.ShapeDtypeStruct(jnp.shape(x)[1:], jnp.float32),
+                mesh)
+            return NamedSharding(mesh, _guard(mesh, jnp.shape(x),
+                                              (None,) + tuple(inner)))
+        return NamedSharding(mesh, param_spec(path, x, mesh))
+    return jax.tree_util.tree_map_with_path(spec, afl_state)
+
+
+def infer_batch_shardings(batch, mesh: Mesh):
+    b_axes = _batch_axes(mesh)
+
+    def spec(path, x):
+        nd = jnp.ndim(x)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _guard(mesh, jnp.shape(x),
+                                          (b_axes,) + (None,) * (nd - 1)))
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def infer_decode_cache_shardings(cache, mesh: Mesh, batch: int):
+    b_axes = _batch_axes(mesh)
+    batch_sharded = batch % max(_axis_size(mesh, b_axes), 1) == 0 and \
+        _axis_size(mesh, b_axes) > 1
+
+    def spec(path, x):
+        return NamedSharding(mesh, cache_spec(path, x, mesh, batch_sharded))
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def infer_opt_shardings(opt_state, mesh: Mesh):
+    def spec(path, x):
+        if jnp.ndim(x) <= 1:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(path, x, mesh))
+    return jax.tree_util.tree_map_with_path(spec, opt_state)

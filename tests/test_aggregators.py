@@ -1,0 +1,146 @@
+"""Aggregation rules: exact semantics + the paper's Table 1 term properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, Arrival,
+                                    CA2FL, DelayAdaptiveASGD, FedBuff,
+                                    VanillaASGD)
+from repro.core.mse import decompose, expected_update_ace
+
+
+def _payload(rng, d=16):
+    return jnp.asarray(rng.normal(size=d), jnp.float32)
+
+
+def test_ace_incremental_equals_direct():
+    rng = np.random.default_rng(0)
+    n, d = 6, 32
+    init = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    inc, dir_ = ACEIncremental(), ACEDirect()
+    s1, s2 = inc.init_state(n, d, init), dir_.init_state(n, d, init)
+    for t in range(20):
+        arr = Arrival(int(rng.integers(n)), _payload(rng, d), t, 1)
+        s1, u1, _ = inc.on_arrival(s1, arr)
+        s2, u2, _ = dir_.on_arrival(s2, arr)
+        np.testing.assert_allclose(np.asarray(u1), np.asarray(u2),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ace_int8_mean_invariant():
+    """Incremental u must equal mean of dequantized cache rows exactly."""
+    rng = np.random.default_rng(1)
+    n, d = 5, 64
+    init = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    agg = ACEIncremental(cache_dtype="int8")
+    s = agg.init_state(n, d, init)
+    for t in range(15):
+        arr = Arrival(int(rng.integers(n)), _payload(rng, d) * 10, t, 1)
+        s, u, _ = agg.on_arrival(s, arr)
+        np.testing.assert_allclose(np.asarray(u),
+                                   np.asarray(s["cache"].mean()),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fedbuff_flush_every_m():
+    agg = FedBuff(buffer_size=3)
+    s = agg.init_state(4, 8)
+    updates = []
+    for t in range(9):
+        s, u, _ = agg.on_arrival(s, Arrival(t % 4, jnp.ones(8) * (t + 1), t, 0))
+        updates.append(u)
+    # emits on arrivals 2,5,8 with means (1+2+3)/3 etc.
+    assert [u is not None for u in updates] == [False, False, True] * 3
+    np.testing.assert_allclose(np.asarray(updates[2]), np.full(8, 2.0))
+    np.testing.assert_allclose(np.asarray(updates[5]), np.full(8, 5.0))
+
+
+def test_ca2fl_calibration_identity():
+    """After every client has reported once, a flush with fresh deltas equals
+    h_bar + mean(delta - h) — check against manual computation."""
+    rng = np.random.default_rng(2)
+    n, d, M = 4, 8, 2
+    agg = CA2FL(buffer_size=M)
+    s = agg.init_state(n, d)
+    h_manual = np.zeros((n, d), np.float32)
+    t = 0
+    for round_ in range(4):
+        accum = np.zeros(d, np.float32)
+        clients = [(2 * round_) % n, (2 * round_ + 1) % n]
+        h_bar_prev = h_manual.mean(0).copy()   # h_bar fixed since last flush
+        for j in clients:
+            p = rng.normal(size=d).astype(np.float32)
+            accum += p - h_manual[j]
+            s, u, _ = agg.on_arrival(s, Arrival(j, jnp.asarray(p), t, 0))
+            h_manual[j] = p
+            t += 1
+        # u from the flush must equal h_bar_prev + accum/M
+        np.testing.assert_allclose(np.asarray(u), h_bar_prev + accum / M,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_aced_active_set_and_rejoin():
+    agg = ACED(tau_algo=2)
+    n, d = 3, 4
+    s = agg.init_state(n, d, jnp.zeros((n, d)))
+    # client 0 arrives repeatedly; clients 1,2 go stale after tau_algo
+    for t in range(1, 6):
+        s, u, _ = agg.on_arrival(s, Arrival(0, jnp.ones(d) * t, t, 0))
+    active = (5 - np.asarray(s["t_start"])) <= 2
+    assert active.tolist() == [True, False, False]
+    # stale client 1 rejoins: next arrival resets its t_start
+    s, u, _ = agg.on_arrival(s, Arrival(1, jnp.ones(d) * 9, 6, 5))
+    active = (6 - np.asarray(s["t_start"])) <= 2
+    assert active[1]
+
+
+def test_delay_adaptive_scale():
+    agg = DelayAdaptiveASGD(tau_c=5)
+    s = agg.init_state(2, 4)
+    _, _, sc1 = agg.on_arrival(s, Arrival(0, jnp.ones(4), 0, 3))
+    _, _, sc2 = agg.on_arrival(s, Arrival(0, jnp.ones(4), 0, 20))
+    assert sc1 == 1.0 and abs(sc2 - 0.25) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 1 properties via the MSE decomposition
+# ---------------------------------------------------------------------------
+
+def test_term_b_zero_for_ace_and_not_for_subset():
+    """E[B]=0 for all-client aggregation; |B|>0 for partial participation
+    under heterogeneity (quadratic clients, analytic gradients)."""
+    rng = np.random.default_rng(3)
+    n, d = 8, 12
+    C = rng.normal(size=(n, d)) * 2.0          # client optima (heterogeneity)
+    stale_models = [rng.normal(size=d) for _ in range(n)]  # w^{t-tau_i}
+    true_grads_stale = np.stack([stale_models[i] - C[i] for i in range(n)])
+    w_t = rng.normal(size=d)
+    grad_now = np.mean([w_t - C[i] for i in range(n)], 0)
+    grad_stale = true_grads_stale.mean(0)
+
+    # ACE: u_bar = mean over ALL clients' true stale grads => B == 0
+    u_bar_ace = expected_update_ace(true_grads_stale)
+    ace = decompose(u_bar_ace, u_bar_ace, grad_stale, grad_now)
+    assert ace["B_sq"] < 1e-20
+
+    # partial participation (m=2): bias strictly positive in expectation
+    b_sqs = []
+    for _ in range(50):
+        subset = rng.choice(n, 2, replace=False)
+        u_bar = true_grads_stale[subset].mean(0)
+        b_sqs.append(decompose(u_bar, u_bar, grad_stale, grad_now)["B_sq"])
+    assert np.mean(b_sqs) > 0.1
+
+
+def test_term_a_variance_reduction():
+    """Var of ACE update ~ sigma^2/n vs sigma^2 for single-client ASGD."""
+    rng = np.random.default_rng(4)
+    n, d, sigma, trials = 16, 10, 1.0, 400
+    ace_sq, asgd_sq = [], []
+    for _ in range(trials):
+        noise = rng.normal(size=(n, d)) * sigma
+        ace_sq.append(np.sum(noise.mean(0) ** 2))
+        asgd_sq.append(np.sum(noise[0] ** 2))
+    ratio = np.mean(asgd_sq) / np.mean(ace_sq)
+    assert 0.7 * n < ratio < 1.4 * n

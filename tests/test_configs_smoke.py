@@ -1,0 +1,124 @@
+"""Per-assigned-architecture smoke tests: REDUCED same-family variants
+(≤2-ish layers, d_model ≤ 512, ≤ 4 experts) run one forward + one AFL train
+step on CPU; output shapes asserted, no NaNs. Full configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AFLConfig, InputShape
+from repro.configs.registry import (ARCHS, afl_config, get_config, input_specs,
+                                    concrete_batch, supports_shape)
+from repro.core.distributed import make_afl_train_step
+from repro.models import build_model
+from repro.optim import sgd
+
+SMOKE_SHAPE = InputShape("smoke", 64, 2, "train")
+
+
+def _reduced(arch):
+    return get_config(arch).reduced()
+
+
+def _smoke_batch(cfg, B=2, L=64, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.frontend == "vision":
+        np_ = cfg.num_patches
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, L - np_)), jnp.int32)
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(B, np_, cfg.d_model)) * 0.1, jnp.float32)
+        batch["positions3"] = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None, None], (B, 3, L))
+    elif cfg.frontend == "audio":
+        batch["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(B, L // cfg.encoder_frames_ratio, cfg.d_model))
+            * 0.1, jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32)
+    batch["targets"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list(ARCHS), ids=list(ARCHS))
+def test_reduced_forward_and_train_step(arch):
+    cfg = _reduced(arch)
+    assert cfg.d_model <= 512 and (cfg.num_experts or 0) <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+
+    logits, _ = model.forward(params, batch)
+    B, L = batch["targets"].shape
+    assert logits.shape == (B, L, cfg.vocab_size)
+    assert not jnp.isnan(logits).any()
+
+    aflc = afl_config(arch, n_clients=4)
+    init_fn, step_fn = make_afl_train_step(model.loss_fn, aflc, sgd(0.01))
+    step_fn = jax.jit(step_fn)
+    state = init_fn(params)
+    l0 = None
+    for t in range(2):
+        state, m = step_fn(state, batch, jnp.int32(t % 4), jnp.int32(1))
+        assert jnp.isfinite(m["loss"]), arch
+        l0 = l0 or float(m["loss"])
+    assert float(m["loss"]) <= l0 * 1.5  # not diverging
+
+
+@pytest.mark.parametrize("arch", list(ARCHS), ids=list(ARCHS))
+def test_reduced_decode_step(arch):
+    cfg = _reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    cache = model.init_cache(B, S)
+    tok = jnp.zeros((B,), jnp.int32)
+    for t in range(3):
+        logits, cache = model.decode_step(params, cache, tok, jnp.int32(t))
+        assert logits.shape == (B, cfg.vocab_size)
+        assert not jnp.isnan(logits).any(), arch
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_input_specs_cover_all_supported_shapes():
+    from repro.configs.base import INPUT_SHAPES
+    count = 0
+    for arch in ARCHS:
+        for shape in INPUT_SHAPES.values():
+            if not supports_shape(arch, shape.name):
+                assert shape.name == "long_500k"
+                continue
+            cfg = get_config(arch, shape=shape.name)
+            specs = input_specs(cfg, shape)
+            leaves = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+            count += 1
+    assert count == 33  # 10*4 - 7 long_500k skips
+
+
+def test_gemma2_long_context_uses_swa_variant():
+    cfg = get_config("gemma2-2b", shape="long_500k")
+    assert cfg.name == "gemma2-2b-swa"
+    assert cfg.sub_quadratic
+    cfg_std = get_config("gemma2-2b", shape="train_4k")
+    assert not cfg_std.sub_quadratic
+
+
+def test_param_counts_close_to_nameplate():
+    expect = {"qwen3-moe-235b-a22b": 235e9, "yi-9b": 8.8e9, "gemma2-2b": 2.6e9,
+              "qwen2-vl-7b": 7.6e9, "minicpm3-4b": 4.1e9,
+              "arctic-480b": 477e9, "mamba2-780m": 0.78e9,
+              "zamba2-1.2b": 1.0e9, "llama3-405b": 406e9,
+              "seamless-m4t-medium": 0.7e9}
+    for arch, e in expect.items():
+        got = ARCHS[arch].param_count()
+        assert abs(got - e) / e < 0.15, (arch, got, e)

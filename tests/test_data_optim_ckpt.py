@@ -1,0 +1,99 @@
+"""Data pipeline, optimizers, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.partition import dirichlet_partition, label_histograms
+from repro.data.synthetic import (make_classification,
+                                  make_text_classification, make_token_stream)
+from repro.optim import adamw, cosine_schedule, sgd, sgd_momentum, sqrt_nt_schedule
+
+
+# ---------------------------- data ----------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 20), st.floats(0.05, 10.0))
+def test_dirichlet_partition_is_a_partition(n_clients, alpha):
+    labels = np.random.default_rng(0).integers(0, 5, size=500)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=1)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500          # exactly once
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_dirichlet_alpha_controls_skew():
+    labels = np.random.default_rng(0).integers(0, 10, size=20000)
+    h_low = label_histograms(labels, dirichlet_partition(labels, 20, 0.05, 1))
+    h_high = label_histograms(labels, dirichlet_partition(labels, 20, 100.0, 1))
+
+    def skew(h):
+        p = h / np.maximum(h.sum(1, keepdims=True), 1)
+        return np.mean(np.max(p, 1))               # max class share per client
+    assert skew(h_low) > 2 * skew(h_high)
+
+
+def test_synthetic_datasets_deterministic():
+    a1 = make_classification(100, seed=3)[0]
+    a2 = make_classification(100, seed=3)[0]
+    np.testing.assert_array_equal(a1, a2)
+    t1 = make_token_stream(1000, vocab=64, seed=5)
+    t2 = make_token_stream(1000, vocab=64, seed=5)
+    np.testing.assert_array_equal(t1, t2)
+    assert t1.max() < 64
+    x, y = make_text_classification(50, n_classes=4, seq_len=16, vocab=128)
+    assert x.shape == (50, 16) and y.max() < 4
+
+
+# ---------------------------- optim ---------------------------------------
+
+@pytest.mark.parametrize("mk", [lambda: sgd(0.1), lambda: sgd_momentum(0.05),
+                                lambda: adamw(0.1)],
+                         ids=["sgd", "momentum", "adamw"])
+def test_optimizers_minimize_quadratic(mk):
+    opt = mk()
+    params = {"w": jnp.ones(8) * 5.0}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: 0.5 * jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(jnp.sum(params["w"] ** 2)) < 1e-2
+
+
+def test_sqrt_nt_schedule_matches_paper():
+    lr = sqrt_nt_schedule(0.2, 100, 500)
+    assert abs(lr(0) - 0.2 * np.sqrt(100 / 500)) < 1e-9
+    assert lr(0) == lr(499)
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) == pytest.approx(0.1, abs=1e-6)
+
+
+# ---------------------------- checkpoint -----------------------------------
+
+def test_checkpoint_roundtrip_and_rotation():
+    tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "afl": {"cache": {"q": jnp.ones((4, 5), jnp.int8),
+                              "scale": jnp.ones((4,))}},
+            "step": jnp.int32(7)}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4):
+            save_checkpoint(d, s, tree, keep=2)
+        assert latest_step(d) == 4
+        npz = [f for f in os.listdir(d) if f.endswith(".npz")]
+        assert len(npz) == 2                        # rotation keeps 2
+        target = jax.tree.map(jnp.zeros_like, tree)
+        back = restore_checkpoint(d, 4, target)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,115 @@
+"""Distributed (pjit-able) AFL step == flat simulator aggregators, and the
+int8 invariant at the tree level."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import AFLConfig
+from repro.core import cache as cache_lib
+from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
+                                    Arrival, FedBuff)
+from repro.core.distributed import (afl_state_bytes, init_afl_state,
+                                    make_afl_train_step)
+from repro.optim import sgd
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum((params["w"] - batch["c"]) ** 2) \
+        + 0.5 * jnp.sum((params["b"] - batch["c"][:2]) ** 2)
+
+
+def _flat_agg_for(algo, n, tau_algo=3, M=2):
+    return {"ace": lambda: ACEIncremental(),
+            "ace_direct": lambda: ACEDirect(),
+            "aced": lambda: ACED(tau_algo=tau_algo),
+            "fedbuff": lambda: FedBuff(buffer_size=M),
+            "ca2fl": lambda: CA2FL(buffer_size=M)}[algo]()
+
+
+@pytest.mark.parametrize("algo", ["ace", "ace_direct", "aced", "fedbuff",
+                                  "ca2fl"])
+def test_distributed_matches_flat(algo):
+    n, steps = 4, 10
+    cfg = AFLConfig(algorithm=algo, n_clients=n, buffer_size=2, tau_algo=3)
+    params = {"w": jnp.zeros(6), "b": jnp.zeros(2)}
+    init_fn, step_fn = make_afl_train_step(quad_loss, cfg, sgd(0.1))
+    step_fn = jax.jit(step_fn)
+    state = init_fn(params)
+
+    flat_agg = _flat_agg_for(algo, n)
+    d = 8
+    flat_state = flat_agg.init_state(n, d, jnp.zeros((n, d)))
+    w_flat = np.zeros(d, np.float32)
+
+    rng = np.random.default_rng(0)
+    for t in range(steps):
+        j = int(rng.integers(n))
+        c = jnp.asarray(rng.normal(size=6), jnp.float32)
+        batch = {"c": c}
+        state, m = step_fn(state, batch, jnp.int32(j), jnp.int32(1))
+        # flat reference: same gradient (ravel_pytree orders keys: b then w)
+        params_ref = {"b": jnp.asarray(w_flat[:2]), "w": jnp.asarray(w_flat[2:])}
+        g = jax.grad(quad_loss)(params_ref, batch)
+        gf = np.asarray(ravel_pytree(g)[0])
+        flat_state, u, sc = flat_agg.on_arrival(
+            flat_state, Arrival(j, jnp.asarray(gf), t, 1))
+        if u is not None:
+            w_flat = w_flat - 0.1 * sc * np.asarray(u)
+    got = np.concatenate([np.asarray(state.params["b"]),
+                          np.asarray(state.params["w"])])
+    np.testing.assert_allclose(got, w_flat, rtol=1e-5, atol=1e-6)
+
+
+def test_tree_cache_int8_invariant():
+    n = 3
+    grads_like = {"a": jnp.zeros((4, 5)), "b": jnp.zeros(7)}
+    cache = cache_lib.init_tree_cache(n, grads_like, "int8")
+    rng = np.random.default_rng(1)
+    u = cache_lib.tree_cache_mean(cache)
+    for t in range(8):
+        j = int(rng.integers(n))
+        g = {"a": jnp.asarray(rng.normal(size=(4, 5)) * 3, jnp.float32),
+             "b": jnp.asarray(rng.normal(size=7), jnp.float32)}
+        old = cache_lib.tree_cache_row(cache, j)
+        cache = cache_lib.tree_cache_set_row(cache, j, g)
+        new = cache_lib.tree_cache_row(cache, j)
+        u = jax.tree.map(lambda u_, nw, od: u_ + (nw - od) / n, u, new, old)
+    mean = cache_lib.tree_cache_mean(cache)
+    for a, b in zip(jax.tree.leaves(u), jax.tree.leaves(mean)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_int8_quantization_error_small_on_update_path():
+    """ACE with int8 cache tracks fp32 ACE closely (paper Fig. a.3)."""
+    n, steps = 4, 30
+    params = {"w": jnp.zeros(6), "b": jnp.zeros(2)}
+    traj = {}
+    for cd in ("float32", "int8"):
+        cfg = AFLConfig(algorithm="ace", n_clients=n, cache_dtype=cd)
+        init_fn, step_fn = make_afl_train_step(quad_loss, cfg, sgd(0.1))
+        step_fn = jax.jit(step_fn)
+        state = init_fn(params)
+        rng = np.random.default_rng(2)
+        for t in range(steps):
+            batch = {"c": jnp.asarray(rng.normal(size=6), jnp.float32)}
+            state, _ = step_fn(state, batch, jnp.int32(t % n), jnp.int32(1))
+        traj[cd] = np.asarray(state.params["w"])
+    err = np.linalg.norm(traj["int8"] - traj["float32"]) / \
+        (np.linalg.norm(traj["float32"]) + 1e-9)
+    assert err < 0.05
+
+
+def test_afl_state_bytes_table():
+    """Paper Table a.3 storage accounting."""
+    params = {"w": jnp.zeros(1000)}
+    base = AFLConfig(algorithm="ace", n_clients=8, cache_dtype="float32")
+    assert afl_state_bytes(base, params) == 8 * 1000 * 4 + 4000
+    q = AFLConfig(algorithm="ace", n_clients=8, cache_dtype="int8")
+    assert afl_state_bytes(q, params) == 8 * 1000 + 4000
+    fb = AFLConfig(algorithm="fedbuff", n_clients=8)
+    assert afl_state_bytes(fb, params) == 4000
+    asgd = AFLConfig(algorithm="asgd", n_clients=8)
+    assert afl_state_bytes(asgd, params) == 0

@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(+ hypothesis property tests). The kernel body runs in Python on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.cache_update import cache_row_update
+from repro.kernels.masked_agg import masked_agg
+from repro.kernels.quant import dequantize_rows, quantize_rows
+
+
+@pytest.mark.parametrize("n,d", [(2, 128), (8, 1000), (16, 4096), (3, 2049),
+                                 (1, 257)])
+def test_quantize_matches_ref(n, d):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)) * rng.uniform(0.1, 30), jnp.float32)
+    q1, s1 = quantize_rows(x, interpret=True, block_d=512)
+    q2, s2 = ref.quantize_rows_ref(x)
+    assert jnp.array_equal(q1, q2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    x1 = dequantize_rows(q1, s1, interpret=True, block_d=512)
+    np.testing.assert_allclose(np.asarray(x1),
+                               np.asarray(ref.dequantize_rows_ref(q2, s2)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,d,blk", [(4, 512, 128), (16, 3000, 1024),
+                                     (2, 127, 256)])
+def test_masked_agg_matches_ref(n, d, blk):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q, s = ref.quantize_rows_ref(x)
+    for frac in (0.0, 0.5, 1.0):
+        mask = jnp.asarray(rng.random(n) >= frac)
+        u1 = masked_agg(q, s, mask, interpret=True, block_d=blk)
+        u2 = ref.masked_agg_ref(q, s, mask)
+        np.testing.assert_allclose(np.asarray(u1), np.asarray(u2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("d,blk", [(512, 128), (4096, 2048), (1000, 512),
+                                   (129, 128)])
+def test_cache_row_update_matches_ref(d, blk):
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.normal(size=d), jnp.float32)
+    g = jnp.asarray(rng.normal(size=d) * 5, jnp.float32)
+    crow_f = jnp.asarray(rng.normal(size=d), jnp.float32)
+    q, s = ref.quantize_rows_ref(crow_f[None])
+    crow, osc = q[0], s[0]
+    nsc = ref.row_scale(g)
+    a1, b1 = cache_row_update(u, g, crow, osc, nsc, 0.125, interpret=True,
+                              block_d=blk)
+    a2, b2 = ref.cache_row_update_ref(u, g, crow, osc, nsc, 0.125)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=1e-5, atol=1e-5)
+    assert jnp.array_equal(b1, b2)
+
+
+def test_ops_dispatch_xla_equals_interpret():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4, 300)), jnp.float32)
+    qa, sa = ops.quantize_rows(x, backend="xla")
+    qb, sb = ops.quantize_rows(x, backend="interpret")
+    assert jnp.array_equal(qa, qb)
+    mask = jnp.asarray([True, False, True, True])
+    np.testing.assert_allclose(
+        np.asarray(ops.masked_agg(qa, sa, mask, backend="xla")),
+        np.asarray(ops.masked_agg(qa, sa, mask, backend="interpret")),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 300), st.floats(0.01, 100.0))
+def test_quant_roundtrip_error_bound(n, d, scale):
+    """|x - dq(q(x))| <= scale/2 per element (symmetric rounding bound)."""
+    rng = np.random.default_rng(n * 1000 + d)
+    x = jnp.asarray(rng.normal(size=(n, d)) * scale, jnp.float32)
+    q, s = ref.quantize_rows_ref(x)
+    back = ref.dequantize_rows_ref(q, s)
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-6
+    assert np.all(np.abs(np.asarray(back - x)) <= bound)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 200))
+def test_masked_agg_full_mask_is_mean(n, d):
+    rng = np.random.default_rng(d)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q, s = ref.quantize_rows_ref(x)
+    u = ref.masked_agg_ref(q, s, jnp.ones(n, bool))
+    np.testing.assert_allclose(np.asarray(u),
+                               np.asarray(ref.dequantize_rows_ref(q, s).mean(0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(8, 128), st.integers(0, 10**6))
+def test_cache_update_invariant(n, d, seed):
+    """After any update sequence, u == mean(dq(cache)) exactly (Alg. a.5)."""
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q, s = ref.quantize_rows_ref(rows)
+    u = ref.dequantize_rows_ref(q, s).mean(0)
+    for t in range(5):
+        j = int(rng.integers(n))
+        g = jnp.asarray(rng.normal(size=d) * rng.uniform(0.1, 10), jnp.float32)
+        nsc = ref.row_scale(g)
+        u, newrow = ref.cache_row_update_ref(u, g, q[j], s[j], nsc, 1.0 / n)
+        q = q.at[j].set(newrow)
+        s = s.at[j].set(nsc)
+    # invariant holds to f32 accumulation error: ~1e-7 * |row| per update,
+    # rows can reach |g|~scale*127 with the drawn scales => atol O(1e-3)
+    np.testing.assert_allclose(np.asarray(u),
+                               np.asarray(ref.dequantize_rows_ref(q, s).mean(0)),
+                               rtol=1e-3, atol=1e-3)

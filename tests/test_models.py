@@ -1,0 +1,131 @@
+"""Model-family behaviour: forward/grad/decode consistency across families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, SHARED_ATTN, ModelConfig
+from repro.models import build_model
+
+DENSE = ModelConfig(name="dense", family="dense", num_layers=2, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                    head_dim=16)
+GEMMA = ModelConfig(name="g2", family="dense", num_layers=2, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                    head_dim=16, stages=(((ATTN_LOCAL, ATTN), 1),),
+                    window_size=8, logit_softcap=30.0, attn_softcap=50.0)
+MLA = ModelConfig(name="mla", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                  use_mla=True, q_lora_rank=32, kv_lora_rank=16,
+                  qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+SSM = ModelConfig(name="ssm", family="ssm", num_layers=2, d_model=64,
+                  num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=97,
+                  head_dim=1, ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+HYBRID = ModelConfig(name="hyb", family="hybrid", num_layers=6, d_model=64,
+                     num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                     head_dim=16, stages=(((MAMBA, MAMBA, SHARED_ATTN), 2),),
+                     window_size=8, ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+MOE = ModelConfig(name="moe", family="moe", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, num_experts=4, num_experts_per_tok=2,
+                  moe_d_ff=64, capacity_factor=4.0)
+
+ALL = [DENSE, GEMMA, MLA, SSM, HYBRID, MOE]
+
+
+@pytest.mark.parametrize("cfg", ALL, ids=lambda c: c.name)
+def test_decode_matches_forward(cfg):
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, L = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, L), 0, cfg.vocab_size)
+    logits, _ = m.forward(params, {"tokens": toks})
+    cache = m.init_cache(B, L)
+    outs = []
+    for t in range(L):
+        lg, cache = m.decode_step(params, cache, toks[:, t], jnp.int32(t))
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(logits), rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("cfg", ALL, ids=lambda c: c.name)
+def test_grad_finite(cfg):
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, L = 2, 16
+    batch = {"tokens": jnp.ones((B, L), jnp.int32),
+             "targets": jnp.ones((B, L), jnp.int32)}
+    g = jax.grad(m.loss_fn)(params, batch)
+    for leaf in jax.tree.leaves(g):
+        assert jnp.all(jnp.isfinite(leaf))
+
+
+def test_remat_matches_no_remat():
+    m = build_model(DENSE)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "targets": jnp.ones((2, 16), jnp.int32)}
+    l0 = m.loss_fn(params, batch, remat="none")
+    l1 = m.loss_fn(params, batch, remat="full")
+    g0 = jax.grad(lambda p: m.loss_fn(p, batch, remat="none"))(params)
+    g1 = jax.grad(lambda p: m.loss_fn(p, batch, remat="full"))(params)
+    assert np.allclose(float(l0), float(l1), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_scan_vs_unrolled_layers():
+    import dataclasses
+    m1 = build_model(DENSE)
+    m2 = build_model(dataclasses.replace(DENSE, scan_layers=False))
+    params = m1.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+    l1, _ = m1.forward(params, batch)
+    l2, _ = m2.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vlm_mrope_forward():
+    cfg = ModelConfig(name="vlm", family="vlm", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                      head_dim=16, rope_mode="mrope", mrope_sections=(2, 3, 3),
+                      frontend="vision", num_patches=6)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, Lt, Np = 2, 10, 6
+    L = Lt + Np
+    pos3 = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, None],
+                            (B, 3, L))
+    batch = {"tokens": jnp.ones((B, Lt), jnp.int32),
+             "vision_embeds": jnp.ones((B, Np, 64)) * 0.1,
+             "positions3": pos3,
+             "targets": jnp.concatenate([jnp.full((B, Np), -1, jnp.int32),
+                                         jnp.ones((B, Lt), jnp.int32)], 1)}
+    logits, _ = m.forward(params, batch)
+    assert logits.shape == (B, L, 97)
+    loss = m.loss_fn(params, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_encdec_forward_and_decode():
+    cfg = ModelConfig(name="encdec", family="audio", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=97,
+                      head_dim=16, is_encoder_decoder=True,
+                      num_encoder_layers=2, frontend="audio",
+                      encoder_frames_ratio=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, L = 2, 16
+    batch = {"audio_embeds": jnp.ones((B, L // 4, 64)) * 0.1,
+             "tokens": jnp.ones((B, L), jnp.int32),
+             "targets": jnp.ones((B, L), jnp.int32)}
+    logits, _ = m.forward(params, batch)
+    assert logits.shape == (B, L, 97)
+    assert jnp.isfinite(m.loss_fn(params, batch))
+    cache = m.init_cache(B, L)
+    lg, cache = m.decode_step(params, cache, jnp.ones((B,), jnp.int32),
+                              jnp.int32(0))
+    assert lg.shape == (B, 97) and jnp.all(jnp.isfinite(lg))

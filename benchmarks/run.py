@@ -9,6 +9,7 @@ results/bench.jsonl). Suites:
   table_a3  server-state memory accounting
   figa3     8-bit cache quantization
   kernels   server-aggregation kernel microbenchmarks
+  scan      device-resident scan engine vs host event loop (sweep scaling)
 """
 from __future__ import annotations
 
@@ -38,7 +39,7 @@ def _name(row):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--suites", default="table_a3,kernels,table_a1,figa3,"
+    ap.add_argument("--suites", default="table_a3,kernels,scan,table_a1,figa3,"
                                         "figa1,fig3,table_a2,fig2")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default="results/bench.jsonl")
@@ -46,9 +47,10 @@ def main():
     fast = not args.full
 
     from benchmarks import (fig2_heterogeneity, fig3_dropout, figa1_stability,
-                            figa3_quant, kernels_bench, table_a1_comms,
-                            table_a2_bert, table_a3_memory)
+                            figa3_quant, kernels_bench, scan_bench,
+                            table_a1_comms, table_a2_bert, table_a3_memory)
     suites = {
+        "scan": scan_bench.main,
         "fig2": fig2_heterogeneity.main,
         "fig3": fig3_dropout.main,
         "table_a1": table_a1_comms.main,

@@ -6,5 +6,8 @@ from repro.core.cache import (FlatCache, dequantize_rows, init_flat_cache,
                               init_tree_cache, quantize_rows, tree_cache_mean,
                               tree_cache_nbytes, tree_cache_row,
                               tree_cache_set_row)
-from repro.core.delays import ExponentialDelays, arrival_schedule
+from repro.core.delays import (ExponentialDelays, Schedule, arrival_schedule,
+                               build_schedule)
+from repro.core.scan_engine import (ScanResult, make_scan_runner, run_scan,
+                                    run_scan_seeds, sweep)
 from repro.core.simulator import AFLSimulator, SimResult

@@ -9,6 +9,18 @@ Implemented exactly as specified:
   * ACE incremental         (paper Alg. a.5)              (u += (g_new − g_prev)/n, O(d))
   * ACED                    (paper Alg. a.1)              (bounded-delay active set τ_algo)
 
+Every rule is a pure, trace-safe transition
+
+    step(state, arr) -> (state', update (d,), emit (bool []), lr_scale (f32 []))
+
+with `jnp.where`-gated emission instead of `None`/Python-int branching, so a
+rule can live inside `jax.lax.scan` / `jax.vmap` / `jax.jit` (the scan engine
+in repro/core/scan_engine.py runs whole sweeps on device). Buffer counts are
+traced int32; ACED's active-set emission is a traced mask (no device→host
+sync per arrival). `on_arrival` remains as the host-side wrapper used by the
+event-driven simulators: it materialises `emit` and returns `None` when no
+update is emitted, preserving the original protocol.
+
 All operate on flat (d,) payload vectors against a `FlatCache`; the pjit
 distributed path (repro/core/distributed.py) reuses the same rules over
 pytree caches. The server applies ``w ← w − η · lr_scale · update``.
@@ -16,12 +28,14 @@ pytree caches. The server applies ``w ← w − η · lr_scale · update``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.cache import FlatCache, init_flat_cache
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
 
 
 class Arrival(NamedTuple):
@@ -31,16 +45,39 @@ class Arrival(NamedTuple):
     staleness: int              # server iterations since client got its model
 
 
+_TRUE = jnp.ones((), jnp.bool_)
+_ONE = jnp.ones((), jnp.float32)
+
+
+def wants_cache_init(agg) -> bool:
+    """Cache-based rules (ACE/ACED variants) are seeded with one gradient per
+    client before the loop (paper Alg. 1 line 1) — the single predicate every
+    simulator/engine must agree on."""
+    return hasattr(agg, "cache_dtype")
+
+
 class Aggregator:
-    """Base: subclasses define init_state / on_arrival."""
+    """Base: subclasses define init_state / step (pure, trace-safe)."""
     name = "base"
     #: server iterations advance only when an update is emitted
+
     def init_state(self, n: int, d: int, init_grads=None) -> Any:
         raise NotImplementedError
 
-    def on_arrival(self, state, arr: Arrival):
-        """-> (state, update (d,) or None, lr_scale float)."""
+    def step(self, state, arr: Arrival):
+        """Pure transition: -> (state, update (d,), emit (bool), lr_scale).
+
+        Must be trace-safe: no Python branching on traced values, no
+        device→host syncs. `update` is always a (d,) array; when `emit`
+        is False its value is ignored by the caller."""
         raise NotImplementedError
+
+    def on_arrival(self, state, arr: Arrival):
+        """Host wrapper: -> (state, update (d,) or None, lr_scale float)."""
+        state, update, emit, lr_scale = self.step(state, arr)
+        if not bool(emit):
+            return state, None, float(lr_scale)
+        return state, update, float(lr_scale)
 
     def nbytes(self, state) -> int:
         import numpy as _np
@@ -56,8 +93,8 @@ class VanillaASGD(Aggregator):
     def init_state(self, n, d, init_grads=None):
         return ()
 
-    def on_arrival(self, state, arr):
-        return state, arr.payload, 1.0
+    def step(self, state, arr):
+        return state, arr.payload, _TRUE, _ONE
 
 
 @dataclasses.dataclass
@@ -69,10 +106,11 @@ class DelayAdaptiveASGD(Aggregator):
     def init_state(self, n, d, init_grads=None):
         return ()
 
-    def on_arrival(self, state, arr):
-        tau = max(int(arr.staleness), 0)
-        scale = 1.0 if tau <= self.tau_c else float(self.tau_c) / float(tau)
-        return state, arr.payload, scale
+    def step(self, state, arr):
+        tau = jnp.maximum(jnp.asarray(arr.staleness, jnp.float32), 0.0)
+        scale = jnp.where(tau <= self.tau_c, 1.0,
+                          self.tau_c / jnp.maximum(tau, 1.0))
+        return state, arr.payload, _TRUE, scale.astype(jnp.float32)
 
 
 @dataclasses.dataclass
@@ -81,15 +119,17 @@ class FedBuff(Aggregator):
     name = "fedbuff"
 
     def init_state(self, n, d, init_grads=None):
-        return {"accum": jnp.zeros((d,), jnp.float32), "count": 0}
+        return {"accum": jnp.zeros((d,), jnp.float32),
+                "count": jnp.zeros((), jnp.int32)}
 
-    def on_arrival(self, state, arr):
+    def step(self, state, arr):
         accum = state["accum"] + arr.payload
         count = state["count"] + 1
-        if count >= self.buffer_size:
-            return {"accum": jnp.zeros_like(accum), "count": 0}, \
-                accum / count, 1.0
-        return {"accum": accum, "count": count}, None, 1.0
+        emit = count >= self.buffer_size
+        update = accum / count.astype(jnp.float32)       # count ≥ 1
+        new_state = {"accum": jnp.where(emit, jnp.zeros_like(accum), accum),
+                     "count": jnp.where(emit, 0, count)}
+        return new_state, update, emit, _ONE
 
 
 @dataclasses.dataclass
@@ -103,19 +143,24 @@ class CA2FL(Aggregator):
         if init_grads is not None:
             h = init_grads.astype(jnp.float32)
         return {"h": h, "h_bar": jnp.mean(h, 0),
-                "accum": jnp.zeros((d,), jnp.float32), "count": 0}
+                "accum": jnp.zeros((d,), jnp.float32),
+                "count": jnp.zeros((), jnp.int32)}
 
-    def on_arrival(self, state, arr):
+    def step(self, state, arr):
         j = jnp.asarray(arr.client, jnp.int32)
-        accum = state["accum"] + (arr.payload - state["h"][j])
-        h = state["h"].at[j].set(arr.payload)
+        old = jax.lax.dynamic_index_in_dim(state["h"], j, keepdims=False)
+        accum = state["accum"] + (arr.payload - old)
+        h = jax.lax.dynamic_update_index_in_dim(
+            state["h"], arr.payload.astype(jnp.float32), j, 0)
         count = state["count"] + 1
-        if count >= self.buffer_size:
-            v = state["h_bar"] + accum / count
-            return {"h": h, "h_bar": jnp.mean(h, 0),
-                    "accum": jnp.zeros_like(accum), "count": 0}, v, 1.0
-        return {"h": h, "h_bar": state["h_bar"], "accum": accum,
-                "count": count}, None, 1.0
+        emit = count >= self.buffer_size
+        update = state["h_bar"] + accum / count.astype(jnp.float32)
+        new_state = {
+            "h": h,
+            "h_bar": jnp.where(emit, jnp.mean(h, 0), state["h_bar"]),
+            "accum": jnp.where(emit, jnp.zeros_like(accum), accum),
+            "count": jnp.where(emit, 0, count)}
+        return new_state, update, emit, _ONE
 
 
 @dataclasses.dataclass
@@ -127,9 +172,9 @@ class ACEDirect(Aggregator):
     def init_state(self, n, d, init_grads=None):
         return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads)}
 
-    def on_arrival(self, state, arr):
+    def step(self, state, arr):
         cache = state["cache"].set_row(arr.client, arr.payload)
-        return {"cache": cache}, cache.mean(), 1.0
+        return {"cache": cache}, cache.mean(), _TRUE, _ONE
 
 
 @dataclasses.dataclass
@@ -137,7 +182,9 @@ class ACEIncremental(Aggregator):
     """Paper Algorithm a.5: u ← u + (g − dq(C_j))/n — O(d) per arrival.
 
     Exact under int8 cache: the subtracted value is the dequantized row that
-    was previously added, so ``u == mean_i dq(C_i)`` is invariant."""
+    was previously added, so ``u == mean_i dq(C_i)`` is invariant. The int8
+    path routes through the fused Pallas `cache_row_update` kernel (via the
+    backend-aware dispatch in repro/kernels/ops.py)."""
     cache_dtype: str = "float32"
     name = "ace"
 
@@ -145,18 +192,35 @@ class ACEIncremental(Aggregator):
         cache = init_flat_cache(n, d, self.cache_dtype, init_grads)
         return {"cache": cache, "u": cache.mean()}
 
-    def on_arrival(self, state, arr):
+    def step(self, state, arr):
         cache, u = state["cache"], state["u"]
-        old = cache.row(arr.client)
-        cache = cache.set_row(arr.client, arr.payload)
-        new = cache.row(arr.client)      # re-read: includes quantization error
-        u = u + (new - old) / cache.n
-        return {"cache": cache, "u": u}, u, 1.0
+        j = jnp.asarray(arr.client, jnp.int32)
+        if cache.data.dtype == jnp.int8:
+            c_row = jax.lax.dynamic_index_in_dim(cache.data, j, keepdims=False)
+            old_scale = jax.lax.dynamic_index_in_dim(cache.scale, j,
+                                                     keepdims=False)
+            new_scale = kernel_ref.row_scale(arr.payload)
+            u, q_row = kernel_ops.cache_row_update(
+                u, arr.payload, c_row, old_scale, new_scale, 1.0 / cache.n)
+            cache = FlatCache(
+                jax.lax.dynamic_update_index_in_dim(cache.data, q_row, j, 0),
+                jax.lax.dynamic_update_index_in_dim(
+                    cache.scale, new_scale.astype(jnp.float32), j, 0))
+        else:
+            old = cache.row(j)
+            cache = cache.set_row(j, arr.payload)
+            new = cache.row(j)
+            u = u + (new - old) / cache.n
+        return {"cache": cache, "u": u}, u, _TRUE, _ONE
 
 
 @dataclasses.dataclass
 class ACED(Aggregator):
-    """Paper Algorithm a.1: active set A(t) = {i : t − t_start_i ≤ τ_algo}."""
+    """Paper Algorithm a.1: active set A(t) = {i : t − t_start_i ≤ τ_algo}.
+
+    Emission is a traced mask (`emit = any(active)`) — no per-arrival host
+    sync. The int8 masked mean routes through the Pallas `masked_agg` kernel
+    dispatch."""
     tau_algo: int = 10
     cache_dtype: str = "float32"
     name = "aced"
@@ -165,15 +229,19 @@ class ACED(Aggregator):
         return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads),
                 "t_start": jnp.ones((n,), jnp.int32)}
 
-    def on_arrival(self, state, arr):
-        cache = state["cache"].set_row(arr.client, arr.payload)
-        t_start = state["t_start"].at[jnp.asarray(arr.client, jnp.int32)].set(arr.t + 1)
-        active = (arr.t - t_start) <= self.tau_algo
-        n_active = int(jnp.sum(active))
-        new_state = {"cache": cache, "t_start": t_start}
-        if n_active == 0:
-            return new_state, None, 1.0
-        return new_state, cache.mean(active), 1.0
+    def step(self, state, arr):
+        j = jnp.asarray(arr.client, jnp.int32)
+        cache = state["cache"].set_row(j, arr.payload)
+        t = jnp.asarray(arr.t, jnp.int32)
+        t_start = jax.lax.dynamic_update_index_in_dim(
+            state["t_start"], t + 1, j, 0)
+        active = (t - t_start) <= self.tau_algo
+        emit = jnp.any(active)
+        if cache.data.dtype == jnp.int8:
+            update = kernel_ops.masked_agg(cache.data, cache.scale, active)
+        else:
+            update = cache.mean(active)
+        return {"cache": cache, "t_start": t_start}, update, emit, _ONE
 
 
 ALGORITHMS = {

@@ -22,9 +22,12 @@ INT8_MAX = 127.0
 
 
 def quantize_rows(x, axis=-1):
-    """x (..., d) -> (q int8, scale (...,))."""
-    scale = jnp.max(jnp.abs(x), axis=axis) / INT8_MAX
-    scale = jnp.maximum(scale, 1e-12)
+    """x (..., d) -> (q int8, scale (...,)).
+
+    Scale formula (clamp |max| before dividing) must match
+    repro/kernels/ref.row_scale and the quant/tree-cache kernels — all int8
+    cache writers share one quantizer."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=axis), 1e-12) / INT8_MAX
     q = jnp.clip(jnp.round(x / jnp.expand_dims(scale, axis)), -127, 127)
     return q.astype(jnp.int8), scale.astype(jnp.float32)
 

@@ -1,0 +1,289 @@
+"""Device-resident scan simulation engine — the whole AFL server loop as one
+`jax.lax.scan`.
+
+The event-driven simulator (repro/core/simulator.py) is the reference
+implementation, but it lives in host Python: a heapq event queue, one
+`grad_fn` round-trip and a handful of eager jnp dispatches per arrival. The
+paper's experimental surface (Fig. 2 grid, Fig. 3 dropout, App. A sweeps) is
+thousands of such runs, so the host loop is the scaling bottleneck.
+
+This engine splits the simulation into:
+
+  1. **Host schedule precompute** — the event queue depends only on the delay
+     model, never on model values, so `build_schedule` (repro/core/delays.py)
+     replays it once on host and emits two int32 arrays: ``arrive[e]`` (whose
+     result the server processes at event e) and ``dispatch[e]`` (who receives
+     the fresh model afterwards). Seeds are matched to `AFLSimulator.run` so
+     the scan replays the exact same trajectory.
+  2. **Device scan** — client payload, aggregator transition (the pure
+     `Aggregator.step` protocol: ``(state, update, emit, lr_scale)`` with
+     `jnp.where`-gated emission) and the model update all run inside a single
+     `jax.lax.scan`, jittable and vmappable over seeds.
+
+Staleness bookkeeping matches the reference simulator: per-client
+``t_received`` (server iteration at dispatch) and ``w_received`` (model copy
+at dispatch, an (n, d) carry) — τ = t − t_received[j], and the server
+iteration t advances only on emitted updates, gated at ``t < T``.
+
+Not modeled here (use the host simulator): permanent dropouts, whose trigger
+depends on the traced iteration counter crossing a threshold mid-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.aggregators import (ALGORITHMS, Aggregator, Arrival,
+                                    wants_cache_init)
+from repro.core.delays import ExponentialDelays, build_schedule
+
+
+@dataclasses.dataclass
+class ScanResult:
+    """Trajectory of one scanned run, host-side (emit-filtered like SimResult)."""
+    ts: np.ndarray             # (n_updates,) server iteration per emitted update
+    losses: np.ndarray         # (n_updates,) client loss at the emitting event
+    update_norms: np.ndarray   # (n_updates,) ‖update‖₂
+    w: np.ndarray              # (d,) final model
+    total_comms: int
+    emit: np.ndarray           # (n_events,) raw emission mask
+    ws: Optional[np.ndarray] = None   # (n_events, d) model after each event
+
+
+def _payload_chain(grad_fn, unravel, local_steps: int, local_lr: float):
+    """Trace-safe client payload with the same PRNG-split chain as
+    `AFLSimulator._client_payload`: one split per call, plus one per local
+    step when local_steps > 1."""
+    K = local_steps
+
+    def payload(w_flat, client, key):
+        key, sub = jax.random.split(key)
+        if K == 1:
+            loss, g = grad_fn(unravel(w_flat), client, sub)
+            return ravel_pytree(g)[0].astype(jnp.float32), loss, key
+        w = w_flat
+        loss = jnp.zeros(())
+        for _ in range(K):
+            key, sub = jax.random.split(key)
+            loss, g = grad_fn(unravel(w), client, sub)
+            w = w - local_lr * ravel_pytree(g)[0]
+        return ((w_flat - w) / (K * local_lr)).astype(jnp.float32), loss, key
+    return payload
+
+
+def make_scan_runner(*, grad_fn: Callable, params0, aggregator: Aggregator,
+                     n_clients: int, server_lr, T: int, n_events: int,
+                     local_steps: int = 1, local_lr: float = 0.05,
+                     init_cache_grads: bool = True, record_w: bool = False):
+    """Build the jitted runner ``run(key, arrive, dispatch) -> (w, state, outs)``.
+
+    `grad_fn(params, client, rng) -> (loss, grads)` must be trace-safe in
+    `client` (a traced int32). `server_lr` may be a float or a trace-safe
+    callable of the server iteration t. The returned runner is pure — vmap it
+    over stacked ``(key, arrive, dispatch)`` for multi-seed sweeps.
+    """
+    n = n_clients
+    flat0, unravel = ravel_pytree(params0)
+    w0 = jnp.asarray(flat0, jnp.float32)
+    d = w0.size
+    agg = aggregator
+    lr_fn = server_lr if callable(server_lr) else (lambda t: server_lr)
+    wants_init = init_cache_grads and wants_cache_init(agg)
+    payload_fn = _payload_chain(grad_fn, unravel, local_steps, local_lr)
+
+    def _run(key, arrive, dispatch):
+        w = w0
+        if wants_init:
+            def init_step(key, client):
+                p, _, key = payload_fn(w0, client, key)
+                return key, p
+            key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n))
+            state = agg.init_state(n, d, init_rows)
+            # paper Alg. 1 line 4-5: apply u^0 before the loop
+            w = w - lr_fn(0) * jnp.mean(init_rows, 0)
+            t0 = 1
+        else:
+            state = agg.init_state(n, d, None)
+            t0 = 0
+
+        carry0 = {
+            "w": w, "key": key, "state": state,
+            "t": jnp.asarray(t0, jnp.int32),
+            "t_recv": jnp.full((n,), t0, jnp.int32),
+            "w_recv": jnp.tile(w[None, :], (n, 1)),
+        }
+
+        def step(carry, ev):
+            aj, dj = ev
+            payload, loss, key = payload_fn(carry["w_recv"][aj], aj,
+                                            carry["key"])
+            t = carry["t"]
+            staleness = t - carry["t_recv"][aj]
+            state, u, emit, lr_scale = agg.step(
+                carry["state"], Arrival(aj, payload, t, staleness))
+            emit = jnp.logical_and(emit, t < T)
+            eta = lr_fn(t) * lr_scale
+            w = jnp.where(emit, carry["w"] - eta * u, carry["w"])
+            t_new = t + emit.astype(jnp.int32)
+            out = {"loss": loss, "emit": emit, "t": t,
+                   "unorm": jnp.linalg.norm(u)}
+            if record_w:
+                out["w"] = w
+            carry = {
+                "w": w, "key": key, "state": state, "t": t_new,
+                "t_recv": carry["t_recv"].at[dj].set(t_new),
+                "w_recv": carry["w_recv"].at[dj].set(w),
+            }
+            return carry, out
+
+        carry, outs = jax.lax.scan(step, carry0,
+                                   (arrive.astype(jnp.int32),
+                                    dispatch.astype(jnp.int32)))
+        return carry["w"], carry["state"], outs
+
+    return jax.jit(_run)
+
+
+def default_n_events(aggregator: Aggregator, T: int,
+                     init_cache_grads: bool = True) -> int:
+    """Events needed to reach T server iterations: buffered rules emit every
+    `buffer_size`-th arrival; cache-init rules consume iteration 0."""
+    t0 = 1 if (init_cache_grads and wants_cache_init(aggregator)) else 0
+    return max(T - t0, 0) * int(getattr(aggregator, "buffer_size", 1))
+
+
+def _to_result(w, outs, T: int, n_init_comms: int) -> ScanResult:
+    emit = np.asarray(outs["emit"])
+    ts = np.asarray(outs["t"])
+    processed = int(np.sum(ts < T))       # events the host loop would pop
+    return ScanResult(
+        ts=ts[emit], losses=np.asarray(outs["loss"])[emit],
+        update_norms=np.asarray(outs["unorm"])[emit],
+        w=np.asarray(w), total_comms=n_init_comms + processed, emit=emit,
+        ws=np.asarray(outs["w"]) if "w" in outs else None)
+
+
+def run_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
+             n_clients: int, server_lr, delays: ExponentialDelays, T: int,
+             n_events: Optional[int] = None,
+             concurrency: Optional[int] = None, local_steps: int = 1,
+             local_lr: float = 0.05, init_cache_grads: bool = True,
+             seed: int = 0, record_w: bool = False) -> ScanResult:
+    """One device-resident run, trajectory-equivalent to `AFLSimulator.run(T)`
+    given the same seed/delays/concurrency."""
+    if n_events is None:
+        n_events = default_n_events(aggregator, T, init_cache_grads)
+    sched = build_schedule(delays, n_events, concurrency, seed)
+    runner = make_scan_runner(
+        grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+        n_clients=n_clients, server_lr=server_lr, T=T, n_events=n_events,
+        local_steps=local_steps, local_lr=local_lr,
+        init_cache_grads=init_cache_grads, record_w=record_w)
+    w, _, outs = runner(jax.random.PRNGKey(seed), sched.arrive, sched.dispatch)
+    wants_init = init_cache_grads and wants_cache_init(aggregator)
+    return _to_result(w, outs, T, n_clients if wants_init else 0)
+
+
+def _seed_batch(seeds: Sequence[int], *, n_clients: int, n_events: int,
+                beta: float, kappa: float, concurrency: Optional[int]):
+    """Stack per-seed schedules and PRNG keys on host (pure precompute)."""
+    arr, disp, keys = [], [], []
+    for s in seeds:
+        sched = build_schedule(
+            ExponentialDelays(beta=beta, kappa=kappa, n_clients=n_clients,
+                              seed=s), n_events, concurrency, seed=s)
+        arr.append(sched.arrive)
+        disp.append(sched.dispatch)
+        keys.append(jax.random.PRNGKey(s))
+    return (jnp.stack(keys), jnp.asarray(np.stack(arr)),
+            jnp.asarray(np.stack(disp)))
+
+
+def _run_batch(runner, batch, T: int, n_init: int) -> List[ScanResult]:
+    keys, arr, disp = batch
+    ws, _, outs = jax.vmap(runner)(keys, arr, disp)
+    jax.block_until_ready(ws)
+    return [_to_result(ws[i], jax.tree.map(lambda o: o[i], outs), T, n_init)
+            for i in range(keys.shape[0])]
+
+
+def run_scan_seeds(*, grad_fn: Callable, params0, aggregator: Aggregator,
+                   n_clients: int, server_lr, T: int,
+                   seeds: Sequence[int], beta: float = 5.0, kappa: float = 0.0,
+                   n_events: Optional[int] = None,
+                   concurrency: Optional[int] = None, local_steps: int = 1,
+                   local_lr: float = 0.05, init_cache_grads: bool = True,
+                   runner=None) -> List[ScanResult]:
+    """vmap one compiled runner over seeds: per-seed schedules and PRNG keys
+    are stacked on host, the whole batch of trajectories runs in one XLA
+    computation. Pass `runner` (a `make_scan_runner` result built with the
+    same aggregator/T/n_events) to reuse a compiled runner across calls."""
+    if n_events is None:
+        n_events = default_n_events(aggregator, T, init_cache_grads)
+    batch = _seed_batch(seeds, n_clients=n_clients, n_events=n_events,
+                        beta=beta, kappa=kappa, concurrency=concurrency)
+    if runner is None:
+        runner = make_scan_runner(
+            grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+            n_clients=n_clients, server_lr=server_lr, T=T, n_events=n_events,
+            local_steps=local_steps, local_lr=local_lr,
+            init_cache_grads=init_cache_grads)
+    wants_init = init_cache_grads and wants_cache_init(aggregator)
+    return _run_batch(runner, batch, T, n_clients if wants_init else 0)
+
+
+def sweep(*, grad_fn: Callable, params0, n_clients: int, server_lr, T: int,
+          algorithms: Sequence[str] = ("asgd", "fedbuff", "ca2fl", "ace",
+                                       "aced"),
+          seeds: Sequence[int] = (0,), beta: float = 5.0, kappa: float = 0.0,
+          concurrency: Optional[int] = None, buffer_size: int = 10,
+          tau_algo: Optional[int] = None, cache_dtype: str = "float32",
+          local_steps: int = 1, local_lr: float = 0.05) -> Dict[str, Dict]:
+    """Registry-driven multi-algorithm × multi-seed sweep on the scan engine.
+
+    One compiled runner per algorithm, vmapped over seeds. Returns per-
+    algorithm summary rows (mean final loss, update-norm tail CV, wall time).
+    """
+    rows: Dict[str, Dict] = {}
+    for name in algorithms:
+        cls = ALGORITHMS[name]
+        kwargs = {}
+        if name in ("fedbuff", "ca2fl"):
+            kwargs["buffer_size"] = buffer_size
+        if name == "aced":
+            kwargs["tau_algo"] = (tau_algo if tau_algo is not None
+                                  else int(2 * beta))
+        if name in ("ace", "ace_direct", "aced"):
+            kwargs["cache_dtype"] = cache_dtype
+        agg = cls(**kwargs)
+        n_events = default_n_events(agg, T)
+        runner = make_scan_runner(
+            grad_fn=grad_fn, params0=params0, aggregator=agg,
+            n_clients=n_clients, server_lr=server_lr, T=T, n_events=n_events,
+            local_steps=local_steps, local_lr=local_lr)
+        # host schedule precompute stays outside the timed region
+        batch = _seed_batch(seeds, n_clients=n_clients, n_events=n_events,
+                            beta=beta, kappa=kappa, concurrency=concurrency)
+        n_init = n_clients if wants_cache_init(agg) else 0
+        t0 = time.time()
+        results = _run_batch(runner, batch, T, n_init)   # cold: incl. compile
+        cold = time.time() - t0
+        t0 = time.time()
+        results = _run_batch(runner, batch, T, n_init)   # warm: steady-state
+        wall = time.time() - t0
+        final_losses = [float(r.losses[-1]) if r.losses.size else float("nan")
+                        for r in results]
+        rows[name] = {
+            "algo": name, "seeds": len(results),
+            "final_loss_mean": float(np.mean(final_losses)),
+            "final_loss_std": float(np.std(final_losses)),
+            "wall_s": wall, "compile_s": max(cold - wall, 0.0),
+            "results": results,
+        }
+    return rows

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.core.aggregators import Aggregator, Arrival
+from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
 from repro.core.delays import ExponentialDelays
 
 
@@ -92,8 +92,7 @@ class AFLSimulator:
         total_comms = 0
 
         init_rows = None
-        wants_cache_init = hasattr(self.agg, "cache_dtype")
-        if self.init_cache_grads and wants_cache_init:
+        if self.init_cache_grads and wants_cache_init(self.agg):
             rows = []
             for i in range(n):
                 p, _ = self._client_payload(self.w, i)
@@ -105,8 +104,8 @@ class AFLSimulator:
         t = 0
         if init_rows is not None:
             # paper Alg. 1 line 4-5: apply u^0 before the loop
-            u0 = np.asarray(jnp.mean(init_rows, 0))
-            self.w = self.w - self.server_lr(0) * u0
+            u0 = np.asarray(jnp.mean(init_rows, 0), np.float32)
+            self.w = self.w - np.float32(self.server_lr(0)) * u0
             t = 1
 
         # --- event queue -------------------------------------------------
@@ -119,7 +118,8 @@ class AFLSimulator:
                                            replace=False))
         else:
             running = list(range(n))
-        idle = [c for c in range(n) if c not in set(running)]
+        running_set = set(running)
+        idle = [c for c in range(n) if c not in running_set]
         now = 0.0
         for c in running:
             heapq.heappush(heap, (now + self.delays.sample(c), seq, c)); seq += 1
@@ -140,7 +140,10 @@ class AFLSimulator:
             state, update, lr_scale = self.agg.on_arrival(
                 state, Arrival(j, jnp.asarray(payload), t, int(staleness)))
             if update is not None:
-                self.w = self.w - self.server_lr(t) * lr_scale * np.asarray(update)
+                # f32 throughout: a bare Python-float scalar would promote w to
+                # f64 and diverge from the device-resident (f32) scan engine
+                eta = np.float32(self.server_lr(t)) * np.float32(lr_scale)
+                self.w = self.w - eta * np.asarray(update, np.float32)
                 res.ts.append(t)
                 res.losses.append(loss)
                 res.update_norms.append(float(np.linalg.norm(np.asarray(update))))

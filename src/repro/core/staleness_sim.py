@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.core.aggregators import Aggregator, Arrival
+from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
 from repro.core.simulator import SimResult
 
 
@@ -76,7 +76,7 @@ class StalenessSimulator:
         n = self.n
         total_comms = 0
         init_rows = None
-        if self.init_cache_grads and hasattr(self.agg, "cache_dtype"):
+        if self.init_cache_grads and wants_cache_init(self.agg):
             rows = [self._payload(self.w, i)[0] for i in range(n)]
             init_rows = jnp.asarray(np.stack(rows))
             total_comms += n
@@ -86,7 +86,8 @@ class StalenessSimulator:
         history.append(self.w.copy())
         t = 0
         if init_rows is not None:
-            self.w = self.w - self.server_lr(0) * np.asarray(jnp.mean(init_rows, 0))
+            self.w = self.w - np.float32(self.server_lr(0)) * np.asarray(
+                jnp.mean(init_rows, 0), np.float32)
             history.append(self.w.copy())
             t = 1
 
@@ -113,7 +114,8 @@ class StalenessSimulator:
             state, update, lr_scale = self.agg.on_arrival(
                 state, Arrival(j, jnp.asarray(payload), t, tau))
             if update is not None:
-                self.w = self.w - self.server_lr(t) * lr_scale * np.asarray(update)
+                eta = np.float32(self.server_lr(t)) * np.float32(lr_scale)
+                self.w = self.w - eta * np.asarray(update, np.float32)
                 history.append(self.w.copy())
                 res.ts.append(t)
                 res.losses.append(loss)

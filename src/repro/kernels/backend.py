@@ -1,0 +1,10 @@
+"""Shared backend policy for the Pallas kernels: one place to decide when
+`pallas_call` compiles vs runs in the interpreter."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Compile on TPU; interpret (Python) everywhere else."""
+    return jax.default_backend() != "tpu"

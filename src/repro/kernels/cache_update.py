@@ -24,6 +24,8 @@ except Exception:  # pragma: no cover
     pltpu = None
     SMEM = None
 
+from repro.kernels.backend import default_interpret
+
 BLOCK_D = 2048  # 2048 f32 = 8 KiB/operand tile; 5 operands << 16 MiB VMEM
 
 
@@ -41,8 +43,13 @@ def _kernel(scalars_ref, u_ref, g_ref, c_ref, u_out_ref, c_out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def cache_row_update(u, g, c_row, old_scale, new_scale, inv_n, *,
-                     block_d: int = BLOCK_D, interpret: bool = True):
-    """u,g (d,) f32; c_row (d,) int8; scalars -> (u' (d,) f32, c_row' int8)."""
+                     block_d: int = BLOCK_D, interpret: bool | None = None):
+    """u,g (d,) f32; c_row (d,) int8; scalars -> (u' (d,) f32, c_row' int8).
+
+    `interpret=None` resolves backend-aware: compiled on TPU, interpreter
+    elsewhere."""
+    if interpret is None:
+        interpret = default_interpret()
     d = u.shape[0]
     pad = (-d) % block_d
     if pad:

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import default_interpret
+
 BLOCK_D = 2048
 
 
@@ -27,8 +29,13 @@ def _kernel(w_ref, c_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def masked_agg(cache, scales, mask, *, block_d: int = BLOCK_D,
-               interpret: bool = True):
-    """cache (n,d) int8; scales (n,) f32; mask (n,) bool -> u (d,) f32."""
+               interpret: bool | None = None):
+    """cache (n,d) int8; scales (n,) f32; mask (n,) bool -> u (d,) f32.
+
+    `interpret=None` resolves backend-aware: compiled on TPU, interpreter
+    elsewhere (the fused int8 path actually compiles where it can)."""
+    if interpret is None:
+        interpret = default_interpret()
     n, d = cache.shape
     denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
     w = mask.astype(jnp.float32) * scales / denom

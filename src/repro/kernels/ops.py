@@ -1,11 +1,16 @@
 """Jit'd dispatch wrappers over the Pallas kernels.
 
 `backend` selection:
-  * "pallas"  — pl.pallas_call, compiled (TPU target)
+  * "pallas"  — pl.pallas_call with the backend-aware interpret default:
+    compiled on TPU (the advertised fused int8 path), interpreter elsewhere
   * "interpret" — pl.pallas_call(interpret=True): kernel body executed in
-    Python on CPU, used for all correctness validation in this container
+    Python, forced even on TPU (debugging)
   * "xla"     — the pure-jnp oracle from ref.py (default on CPU: fastest here,
     and what the distributed train step lowers on the dry-run)
+
+The default (`backend=None`) routes to "pallas" on TPU — where the kernels
+actually compile — and "xla" elsewhere, so the scanned ACE/ACED steps get the
+fused kernels exactly when the hardware supports them.
 """
 from __future__ import annotations
 
@@ -22,31 +27,35 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def _interpret(backend: str):
+    # "pallas" defers to the kernel's backend-aware default (compiled on TPU)
+    return True if backend == "interpret" else None
+
+
 def cache_row_update(u, g, c_row, old_scale, new_scale, inv_n, backend=None):
     backend = backend or default_backend()
     if backend == "xla":
         return ref.cache_row_update_ref(u, g, c_row, old_scale, new_scale, inv_n)
     return _cu.cache_row_update(u, g, c_row, old_scale, new_scale, inv_n,
-                                interpret=(backend == "interpret"))
+                                interpret=_interpret(backend))
 
 
 def masked_agg(cache, scales, mask, backend=None):
     backend = backend or default_backend()
     if backend == "xla":
         return ref.masked_agg_ref(cache, scales, mask)
-    return _ma.masked_agg(cache, scales, mask,
-                          interpret=(backend == "interpret"))
+    return _ma.masked_agg(cache, scales, mask, interpret=_interpret(backend))
 
 
 def quantize_rows(x, backend=None):
     backend = backend or default_backend()
     if backend == "xla":
         return ref.quantize_rows_ref(x)
-    return _q.quantize_rows(x, interpret=(backend == "interpret"))
+    return _q.quantize_rows(x, interpret=_interpret(backend))
 
 
 def dequantize_rows(q, s, backend=None):
     backend = backend or default_backend()
     if backend == "xla":
         return ref.dequantize_rows_ref(q, s)
-    return _q.dequantize_rows(q, s, interpret=(backend == "interpret"))
+    return _q.dequantize_rows(q, s, interpret=_interpret(backend))

@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import default_interpret
+
 BLOCK_D = 2048
 INT8_MAX = 127.0
 
@@ -36,8 +38,13 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def quantize_rows(x, *, block_d: int = BLOCK_D, interpret: bool = True):
-    """x (n, d) f32 -> (q (n, d) int8, scales (n,) f32)."""
+def quantize_rows(x, *, block_d: int = BLOCK_D, interpret: bool | None = None):
+    """x (n, d) f32 -> (q (n, d) int8, scales (n,) f32).
+
+    `interpret=None` resolves backend-aware: compiled on TPU, interpreter
+    elsewhere."""
+    if interpret is None:
+        interpret = default_interpret()
     n, d = x.shape
     pad = (-d) % block_d
     xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
@@ -65,7 +72,10 @@ def quantize_rows(x, *, block_d: int = BLOCK_D, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def dequantize_rows(q, scales, *, block_d: int = BLOCK_D, interpret: bool = True):
+def dequantize_rows(q, scales, *, block_d: int = BLOCK_D,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
     n, d = q.shape
     pad = (-d) % block_d
     qp = jnp.pad(q, ((0, 0), (0, pad))) if pad else q

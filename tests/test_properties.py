@@ -1,0 +1,69 @@
+"""Hypothesis property tests (optional dependency: the whole module skips
+cleanly when `hypothesis` is not installed — tier-1 collection must never
+die on it)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import dirichlet_partition
+from repro.kernels import ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 20), st.floats(0.05, 10.0))
+def test_dirichlet_partition_is_a_partition(n_clients, alpha):
+    labels = np.random.default_rng(0).integers(0, 5, size=500)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=1)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500          # exactly once
+    assert min(len(p) for p in parts) >= 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 300), st.floats(0.01, 100.0))
+def test_quant_roundtrip_error_bound(n, d, scale):
+    """|x - dq(q(x))| <= scale/2 per element (symmetric rounding bound)."""
+    rng = np.random.default_rng(n * 1000 + d)
+    x = jnp.asarray(rng.normal(size=(n, d)) * scale, jnp.float32)
+    q, s = ref.quantize_rows_ref(x)
+    back = ref.dequantize_rows_ref(q, s)
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-6
+    assert np.all(np.abs(np.asarray(back - x)) <= bound)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 200))
+def test_masked_agg_full_mask_is_mean(n, d):
+    rng = np.random.default_rng(d)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q, s = ref.quantize_rows_ref(x)
+    u = ref.masked_agg_ref(q, s, jnp.ones(n, bool))
+    np.testing.assert_allclose(np.asarray(u),
+                               np.asarray(ref.dequantize_rows_ref(q, s).mean(0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(8, 128), st.integers(0, 10**6))
+def test_cache_update_invariant(n, d, seed):
+    """After any update sequence, u == mean(dq(cache)) exactly (Alg. a.5)."""
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q, s = ref.quantize_rows_ref(rows)
+    u = ref.dequantize_rows_ref(q, s).mean(0)
+    for t in range(5):
+        j = int(rng.integers(n))
+        g = jnp.asarray(rng.normal(size=d) * rng.uniform(0.1, 10), jnp.float32)
+        nsc = ref.row_scale(g)
+        u, newrow = ref.cache_row_update_ref(u, g, q[j], s[j], nsc, 1.0 / n)
+        q = q.at[j].set(newrow)
+        s = s.at[j].set(nsc)
+    # invariant holds to f32 accumulation error: ~1e-7 * |row| per update,
+    # rows can reach |g|~scale*127 with the drawn scales => atol O(1e-3)
+    np.testing.assert_allclose(np.asarray(u),
+                               np.asarray(ref.dequantize_rows_ref(q, s).mean(0)),
+                               rtol=1e-3, atol=1e-3)

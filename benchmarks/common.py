@@ -5,17 +5,29 @@ Protocols (see DESIGN.md §7 and EXPERIMENTS.md):
   P2 "comms"      — equal total client→server communications (paper App. E's
                     fair metric: buffered methods get T/M updates)
 Learning rates are tuned per algorithm over c·√(n/T) grids, as in App. F.4.
+
+Runs execute on the device-resident scanned-staleness engine
+(repro/core/scan_staleness.py) by default: one compiled runner per
+(task, algorithm, protocol) — cached across calls — vmapped over seeds, and
+in `tuned` over the whole lr grid at once. Pass ``engine="host"`` to fall
+back to the reference `StalenessSimulator` loop.
 """
 from __future__ import annotations
 
 import time
 from typing import Callable, Dict, List, Optional
 
+import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
                                     DelayAdaptiveASGD, FedBuff, VanillaASGD)
-from repro.core.staleness_sim import StalenessSimulator
+from repro.core.scan_engine import default_n_events
+from repro.core.scan_staleness import (make_staleness_runner,
+                                       run_staleness_grid,
+                                       run_staleness_seeds)
+from repro.core.staleness_sim import StalenessSimulator, default_tau_max
 
 C_GRID_UNBUF = (0.1, 0.2, 0.5)
 C_GRID_BUF = (0.5, 1.0, 2.0)
@@ -36,10 +48,73 @@ def algo_suite(beta: float, M: int = 10, tau_algo: Optional[int] = None,
     ]
 
 
+# one compiled runner per (task, algorithm, protocol statics): lr is a runtime
+# scalar, so every lr-grid point and seed reuses the same XLA executable.
+# The task is kept in the entry: id(task) keying alone would let a freed
+# task's address be reused by a new one and silently hit the stale runner.
+_RUNNER_CACHE: Dict[tuple, tuple] = {}
+
+
+def _scan_runner(task, agg, *, T, n_events, beta, speed_skew, dropout_at):
+    key = (id(task), repr(agg), T, n_events, default_tau_max(beta),
+           speed_skew, dropout_at)
+    if key not in _RUNNER_CACHE:
+        _RUNNER_CACHE[key] = (task, make_staleness_runner(
+            grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+            n_clients=task.n_clients, T=T, beta=beta,
+            speed_skew=speed_skew, dropout_at=dropout_at))
+    return _RUNNER_CACHE[key][1]
+
+
+def _acc_of(ev: Dict) -> float:
+    return ev.get("accuracy", -ev.get("dist", 0.0))
+
+
+def _summarize(task, results, wall: float) -> Dict:
+    """Per-seed ScanResults -> benchmark row: final-eval accuracy per seed,
+    comms aggregated across seeds, update-norm tail CV per seed."""
+    unravel = ravel_pytree(task.params0)[1]
+    accs = [_acc_of(task.eval_fn(unravel(jnp.asarray(r.w)))) for r in results]
+    unorm_cvs = []
+    for r in results:
+        tail = r.update_norms[len(r.update_norms) // 2:]
+        unorm_cvs.append(float(np.std(tail) / (np.mean(tail) + 1e-9)))
+    iters = sum(max(len(r.losses), 1) for r in results)
+    return {"acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
+            "accs": [float(a) for a in accs],
+            "us_per_iter": wall / iters * 1e6,
+            "comms": float(np.mean([r.total_comms for r in results])),
+            "unorm_cvs": unorm_cvs}
+
+
 def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
              seeds=(1,), dropout_frac=0.0, dropout_at=None,
-             speed_skew=0.0, eval_every=None) -> Dict:
-    accs, walls = [], []
+             speed_skew=0.0, eval_every=None, engine="scan") -> Dict:
+    """`eval_every` only affects ``engine="host"`` (periodic SimResult.evals);
+    the scan path evaluates the final model only — an in-scan eval cadence is
+    a ROADMAP follow-up."""
+    if engine == "host":
+        return _run_algo_host(task, agg_factory, T=T, beta=beta, lr=lr,
+                              seeds=seeds, dropout_frac=dropout_frac,
+                              dropout_at=dropout_at, speed_skew=speed_skew,
+                              eval_every=eval_every)
+    agg = agg_factory()
+    n_events = default_n_events(agg, T)
+    runner = _scan_runner(task, agg, T=T, n_events=n_events, beta=beta,
+                          speed_skew=speed_skew, dropout_at=dropout_at)
+    t0 = time.time()
+    results = run_staleness_seeds(
+        grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+        n_clients=task.n_clients, server_lr=lr, T=T, seeds=seeds, beta=beta,
+        speed_skew=speed_skew, dropout_frac=dropout_frac,
+        dropout_at=dropout_at, runner=runner)
+    return _summarize(task, results, time.time() - t0)
+
+
+def _run_algo_host(task, agg_factory, *, T, beta, lr, seeds, dropout_frac,
+                   dropout_at, speed_skew, eval_every) -> Dict:
+    """Reference path: the host StalenessSimulator loop, one run per seed."""
+    accs, unorm_cvs, comms, wall = [], [], [], 0.0
     for seed in seeds:
         sim = StalenessSimulator(
             grad_fn=task.grad_fn, params0=task.params0,
@@ -49,22 +124,44 @@ def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
             dropout_frac=dropout_frac, dropout_at=dropout_at, seed=seed)
         t0 = time.time()
         r = sim.run(T)
-        walls.append((time.time() - t0) / max(len(r.losses), 1))
-        accs.append(r.final_eval().get("accuracy",
-                                       -r.final_eval().get("dist", 0.0)))
+        wall += time.time() - t0
+        accs.append(_acc_of(r.final_eval()))
+        tail = r.update_norms[len(r.update_norms) // 2:]
+        unorm_cvs.append(float(np.std(tail) / (np.mean(tail) + 1e-9)))
+        comms.append(r.total_comms)
+    iters = len(seeds) * max(T, 1)
     return {"acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
-            "us_per_iter": float(np.mean(walls)) * 1e6,
-            "comms": r.total_comms}
+            "accs": [float(a) for a in accs],
+            "us_per_iter": wall / iters * 1e6,
+            "comms": float(np.mean(comms)), "unorm_cvs": unorm_cvs}
 
 
 def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
-          protocol="comms", T_iter=None, **kw) -> Dict:
-    """Tune c over the grid, report the best final metric."""
+          protocol="comms", T_iter=None, engine="scan", **kw) -> Dict:
+    """Tune c over the grid, report the best final metric. On the scan engine
+    the whole grid × seed batch runs as one vmapped XLA computation."""
     T = (comm_budget // M) if protocol == "comms" else (T_iter or comm_budget)
+    lrs = [float(c * np.sqrt(n / T)) for c in c_grid]
+    if engine == "scan":
+        agg = factory()
+        n_events = default_n_events(agg, T)
+        runner = _scan_runner(task, agg, T=T, n_events=n_events, beta=beta,
+                              speed_skew=kw.get("speed_skew", 0.0),
+                              dropout_at=kw.get("dropout_at"))
+        t0 = time.time()
+        grid = run_staleness_grid(
+            grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+            n_clients=task.n_clients, lrs=lrs, T=T, seeds=seeds, beta=beta,
+            speed_skew=kw.get("speed_skew", 0.0),
+            dropout_frac=kw.get("dropout_frac", 0.0),
+            dropout_at=kw.get("dropout_at"), runner=runner)
+        wall = (time.time() - t0) / len(lrs)
+        rows = [_summarize(task, results, wall) for results in grid]
+    else:
+        rows = [run_algo(task, factory, T=T, beta=beta, lr=lr, seeds=seeds,
+                         engine=engine, **kw) for lr in lrs]
     best = None
-    for c in c_grid:
-        lr = c * np.sqrt(n / T)
-        r = run_algo(task, factory, T=T, beta=beta, lr=lr, seeds=seeds, **kw)
+    for c, r in zip(c_grid, rows):
         if best is None or r["acc_mean"] > best["acc_mean"]:
             best = {**r, "c": c, "T": T, "name": name}
     return best

@@ -15,11 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import algo_suite, run_algo, tuned
-from repro.core.aggregators import (ACEIncremental, CA2FL, DelayAdaptiveASGD,
-                                    FedBuff, VanillaASGD)
 from repro.core.fl_tasks import FLTask, make_vision_task
 from repro.core.scan_engine import sweep
-from repro.core.staleness_sim import StalenessSimulator
 
 
 def quadratic_task(n=40, d=30, zeta=3.0, sigma=0.3, seed=0) -> FLTask:
@@ -50,7 +47,7 @@ def run_quadratic(fast=True):
                 best, best_floor = None, None
                 for lr in (0.005, 0.01, 0.02, 0.05):
                     r = run_algo(task, factory, T=T // M, beta=beta, lr=lr,
-                                 seeds=(2,), eval_every=max(T // M // 8, 1))
+                                 seeds=(2,))
                     floor = -r["acc_mean"]
                     if best_floor is None or floor < best_floor:
                         best_floor, best = floor, r

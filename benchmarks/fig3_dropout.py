@@ -1,6 +1,10 @@
 """Paper Fig. 3: (a) dropout robustness — ACED vs conceptual ACE vs CA2FL vs
 Vanilla ASGD for 0–70% permanent dropouts at t = T/2; (b) tau_algo ablation
-(too small -> participation bias; too large -> staleness)."""
+(too small -> participation bias; too large -> staleness).
+
+Dropout runs device-resident: the scanned-staleness engine folds the
+`t >= dropout_at` trigger into the traced sampling logits, so every
+(fraction, algorithm) cell is one compiled scan instead of a host loop."""
 from __future__ import annotations
 
 import json

@@ -1,16 +1,20 @@
 """Paper Fig. a.1: training stability — variance bands across seeds and
 update-norm volatility. Multi-client aggregation (ACE/ACED) should show the
-narrowest bands; single-client updates (ASGD) the widest."""
+narrowest bands; single-client updates (ASGD) the widest.
+
+Runs on the scanned-staleness engine via `run_algo` (all three seeds in one
+vmapped computation); per-seed accuracies and update-norm CVs come straight
+from the shared runner instead of a local host loop."""
 from __future__ import annotations
 
 import json
 
 import numpy as np
 
+from benchmarks.common import run_algo
 from repro.core.aggregators import (ACED, ACEIncremental, FedBuff,
                                     VanillaASGD)
 from repro.core.fl_tasks import make_vision_task
-from repro.core.staleness_sim import StalenessSimulator
 
 
 def main(fast=True):
@@ -23,20 +27,13 @@ def main(fast=True):
                              ("aced", lambda: ACED(tau_algo=10), 1),
                              ("fedbuff", lambda: FedBuff(buffer_size=10), 10),
                              ("asgd", lambda: VanillaASGD(), 1)]:
-        accs, unorm_std = [], []
-        for seed in (1, 2, 3):
-            sim = StalenessSimulator(
-                grad_fn=task.grad_fn, params0=task.params0,
-                aggregator=factory(), n_clients=n, server_lr=lr, beta=beta,
-                eval_fn=task.eval_fn, eval_every=T // M, seed=seed)
-            r = sim.run(T // M)
-            accs.append(r.final_eval()["accuracy"])
-            tail = r.update_norms[len(r.update_norms) // 2:]
-            unorm_std.append(np.std(tail) / (np.mean(tail) + 1e-9))
+        r = run_algo(task, factory, T=T // M, beta=beta, lr=lr,
+                     seeds=(1, 2, 3))
         rows.append({"bench": "figa1_stability", "algo": name,
-                     "acc": float(np.mean(accs)),
-                     "acc_std_over_seeds": float(np.std(accs)),
-                     "update_norm_cv": float(np.mean(unorm_std))})
+                     "acc": r["acc_mean"],
+                     "acc_std_over_seeds": r["acc_std"],
+                     "update_norm_cv": float(np.mean(r["unorm_cvs"])),
+                     "us_per_iter": r["us_per_iter"]})
     return rows
 
 

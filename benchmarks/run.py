@@ -42,9 +42,12 @@ def main():
     ap.add_argument("--suites", default="table_a3,kernels,scan,table_a1,figa3,"
                                         "figa1,fig3,table_a2,fig2")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any suite raises (CI smoke mode)")
     ap.add_argument("--out", default="results/bench.jsonl")
     args = ap.parse_args()
     fast = not args.full
+    failed = []
 
     from benchmarks import (fig2_heterogeneity, fig3_dropout, figa1_stability,
                             figa3_quant, kernels_bench, scan_bench,
@@ -70,6 +73,7 @@ def main():
                 rows = suites[s](fast=fast)
             except Exception as e:
                 print(f"{s},0,ERROR:{type(e).__name__}:{e}", flush=True)
+                failed.append(s)
                 continue
             for row in rows:
                 row["suite"] = s
@@ -78,6 +82,8 @@ def main():
                 print(f"{_name(row)},{us:.1f},{_derived(row)}", flush=True)
             print(f"# suite {s} done in {time.time()-t0:.1f}s",
                   file=sys.stderr, flush=True)
+    if args.strict and failed:
+        sys.exit(f"benchmark suites failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,26 @@
-"""Scan engine vs host event loop: the sweep-scaling benchmark.
+"""Scan engines vs host loops: the sweep-scaling benchmark.
 
 The paper's experimental surface is thousands of arrival-driven server-loop
-runs; this measures the device-resident `lax.scan` engine against the
-reference host (heapq) simulator on the acceptance workload — a 100-client ×
-500-iteration ACE run — plus the multi-seed vmap path the host loop cannot
-take at all. Both paths use the same jitted grad_fn, so the delta is purely
-loop residency (host Python + per-arrival dispatches vs one compiled scan).
+runs; this measures both device-resident `lax.scan` engines against their
+host references:
+
+  * event protocol — the 100-client × 500-iteration ACE workload (host heapq
+    `AFLSimulator` vs repro/core/scan_engine.py), plus the multi-seed vmap
+    path the host loop cannot take at all (warm and compile timed apart);
+  * sampled-staleness protocol — the 50-client × 400-iteration vision
+    workload the Fig. 2/3 suites run on (host `StalenessSimulator` vs
+    repro/core/scan_staleness.py), host driven in seed-matched replay mode so
+    the timed loops follow the identical trajectory and the deviation is a
+    free correctness check.
+
+Every run appends to the returned rows AND `main` persists them to
+``BENCH_scan.json`` at the repo root so the perf trajectory is tracked
+across PRs in version control.
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -18,9 +29,16 @@ import numpy as np
 
 from repro.core.aggregators import ACEIncremental
 from repro.core.delays import ExponentialDelays, build_schedule
+from repro.core.fl_tasks import make_vision_task
 from repro.core.scan_engine import (default_n_events, make_scan_runner,
                                     run_scan_seeds)
+from repro.core.scan_staleness import (build_staleness_randomness,
+                                       make_staleness_runner)
 from repro.core.simulator import AFLSimulator
+from repro.core.staleness_sim import StalenessSimulator
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_scan.json")
 
 
 def _quad_grad_fn(n, d, zeta=2.0, sigma=0.2, seed=0):
@@ -34,7 +52,7 @@ def _quad_grad_fn(n, d, zeta=2.0, sigma=0.2, seed=0):
     return grad_fn
 
 
-def main(fast=True):
+def _event_rows(fast=True):
     n, T, d = 100, 500, 1024 if fast else 8192
     beta, lr, seed = 5.0, 0.05, 0
     grad_fn = _quad_grad_fn(n, d)
@@ -50,7 +68,7 @@ def main(fast=True):
     host_s = time.time() - t0
     host_iters = max(len(host_res.losses), 1)
     rows.append({"bench": "scan_bench", "algo": "ace_host_loop",
-                 "us_per_iter": host_s / host_iters * 1e6,
+                 "us_per_iter": host_s / host_iters * 1e6, "wall_s": host_s,
                  "derived": f"wall={host_s:.2f}s"})
 
     # --- device-resident scan --------------------------------------------
@@ -71,26 +89,94 @@ def main(fast=True):
     scan_s = time.time() - t0
     speedup = host_s / max(scan_s, 1e-9)
     rows.append({"bench": "scan_bench", "algo": "ace_scan_engine",
-                 "us_per_iter": scan_s / host_iters * 1e6,
-                 "compile_s": compile_s,
+                 "us_per_iter": scan_s / host_iters * 1e6, "wall_s": scan_s,
+                 "compile_s": compile_s, "speedup_vs_host": speedup,
                  "derived": f"speedup={speedup:.1f}x_vs_host"})
 
     # sanity: same trajectory as the host loop (same seed/schedule)
     dev = float(np.max(np.abs(np.asarray(w) - np.asarray(sim.w, np.float32))))
     rows.append({"bench": "scan_bench", "algo": "scan_host_max_dev",
-                 "us_per_iter": 0.0, "derived": f"max_dev={dev:.2e}"})
+                 "us_per_iter": 0.0, "max_dev": dev,
+                 "derived": f"max_dev={dev:.2e}"})
 
     # --- vmapped multi-seed sweep (no host analogue) ----------------------
+    # one runner, compiled once; first batch is the cold (compile) pass and
+    # the second the warm steady-state the sweep runners see
     seeds = tuple(range(4 if fast else 16))
+    kw = dict(grad_fn=grad_fn, params0=jnp.zeros(d),
+              aggregator=ACEIncremental(), n_clients=n, server_lr=lr, T=T,
+              seeds=seeds, beta=beta, runner=runner)
     t0 = time.time()
-    batch = run_scan_seeds(grad_fn=grad_fn, params0=jnp.zeros(d),
-                           aggregator=ACEIncremental(), n_clients=n,
-                           server_lr=lr, T=T, seeds=seeds, beta=beta)
+    run_scan_seeds(**kw)
+    cold_s = time.time() - t0
+    t0 = time.time()
+    run_scan_seeds(**kw)
     vmap_s = time.time() - t0
     rows.append({"bench": "scan_bench",
                  "algo": f"ace_scan_vmap_{len(seeds)}seeds",
                  "us_per_iter": vmap_s / (host_iters * len(seeds)) * 1e6,
-                 "derived": f"wall={vmap_s:.2f}s_incl_compile"})
+                 "wall_s": vmap_s, "compile_s": max(cold_s - vmap_s, 0.0),
+                 "derived": f"warm={vmap_s:.2f}s"})
+    return rows
+
+
+def _staleness_rows(fast=True):
+    """Sampled-staleness protocol on the acceptance workload: 50 clients ×
+    400 iterations of the Fig. 2/3 vision task, ACE."""
+    n, T, beta, seed = 50, 400, 5.0, 0
+    task = make_vision_task(n_clients=n, alpha=0.3, n_train=8000, n_test=2000,
+                            dim=32, hidden=(64,), n_classes=10, noise=1.0,
+                            batch=5, seed=0)
+    lr = 0.2 * float(np.sqrt(n / T))
+    agg = ACEIncremental()
+    n_events = default_n_events(agg, T)
+    rand = build_staleness_randomness(seed, n_events, n, beta)
+    rows = []
+
+    # host reference, replay mode: identical trajectory to the scan below
+    sim = StalenessSimulator(grad_fn=task.grad_fn, params0=task.params0,
+                             aggregator=agg, n_clients=n, server_lr=lr,
+                             beta=beta, seed=seed, replay=rand)
+    t0 = time.time()
+    host_res = sim.run(T)
+    host_s = time.time() - t0
+    host_iters = max(len(host_res.losses), 1)
+    rows.append({"bench": "scan_bench", "algo": "staleness_host_loop",
+                 "us_per_iter": host_s / host_iters * 1e6, "wall_s": host_s,
+                 "derived": f"wall={host_s:.2f}s"})
+
+    runner = make_staleness_runner(grad_fn=task.grad_fn, params0=task.params0,
+                                   aggregator=ACEIncremental(), n_clients=n,
+                                   T=T, beta=beta)
+    args = (jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
+            rand.dropped, jnp.float32(lr))
+    t0 = time.time()
+    jax.block_until_ready(runner(*args))
+    compile_s = time.time() - t0
+    t0 = time.time()
+    w, _, _ = runner(*args)
+    jax.block_until_ready(w)
+    scan_s = time.time() - t0
+    speedup = host_s / max(scan_s, 1e-9)
+    dev = float(np.max(np.abs(np.asarray(w) - np.asarray(sim.w, np.float32))))
+    rows.append({"bench": "scan_bench", "algo": "staleness_scan_engine",
+                 "us_per_iter": scan_s / host_iters * 1e6, "wall_s": scan_s,
+                 "compile_s": compile_s, "speedup_vs_host": speedup,
+                 "max_dev": dev,
+                 "derived": f"speedup={speedup:.1f}x_vs_host"})
+    return rows
+
+
+def main(fast=True, write_json=True):
+    rows = _event_rows(fast) + _staleness_rows(fast)
+    if write_json:
+        payload = {"workloads": {
+            "event": "100-client x 500-iter ACE quadratic",
+            "staleness": "50-client x 400-iter ACE vision"},
+            "fast": fast, "backend": jax.default_backend(), "rows": rows}
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
     return rows
 
 

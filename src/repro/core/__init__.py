@@ -10,4 +10,12 @@ from repro.core.delays import (ExponentialDelays, Schedule, arrival_schedule,
                                build_schedule)
 from repro.core.scan_engine import (ScanResult, make_scan_runner, run_scan,
                                     run_scan_seeds, sweep)
+from repro.core.scan_staleness import (StalenessRandomness,
+                                       build_staleness_randomness,
+                                       make_staleness_runner,
+                                       run_staleness_grid,
+                                       run_staleness_scan,
+                                       run_staleness_seeds)
 from repro.core.simulator import AFLSimulator, SimResult
+from repro.core.staleness_sim import (StalenessSimulator, default_tau_max,
+                                      staleness_client_probs)

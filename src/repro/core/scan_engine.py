@@ -25,8 +25,10 @@ Staleness bookkeeping matches the reference simulator: per-client
 at dispatch, an (n, d) carry) — τ = t − t_received[j], and the server
 iteration t advances only on emitted updates, gated at ``t < T``.
 
-Not modeled here (use the host simulator): permanent dropouts, whose trigger
-depends on the traced iteration counter crossing a threshold mid-run.
+The sampled-staleness protocol (Fig. 2 axis) — including permanent dropouts,
+whose traced-t trigger folds into the sampling logits — runs device-resident
+in repro/core/scan_staleness.py, which carries a ring-buffer model history
+through the scan and reuses this module's payload chain and result plumbing.
 """
 from __future__ import annotations
 
@@ -161,7 +163,10 @@ def default_n_events(aggregator: Aggregator, T: int,
 def _to_result(w, outs, T: int, n_init_comms: int) -> ScanResult:
     emit = np.asarray(outs["emit"])
     ts = np.asarray(outs["t"])
-    processed = int(np.sum(ts < T))       # events the host loop would pop
+    popped = ts < T                       # events the host loop would pop
+    if "alive" in outs:                   # staleness scan: the host reference
+        popped &= np.asarray(outs["alive"])   # stops once all clients drop
+    processed = int(np.sum(popped))
     return ScanResult(
         ts=ts[emit], losses=np.asarray(outs["loss"])[emit],
         update_norms=np.asarray(outs["unorm"])[emit],

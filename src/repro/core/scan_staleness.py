@@ -1,0 +1,331 @@
+"""Device-resident sampled-staleness engine — the paper's Fig. 2 protocol as
+one `jax.lax.scan`.
+
+The host `StalenessSimulator` (repro/core/staleness_sim.py) is the pinned
+reference for this protocol, but it serializes thousands of arrivals per run
+through eager dispatches: at each server iteration it samples an arriving
+client, samples τ ~ Exp(β), reads the stale model from a bounded deque of
+recent models, and applies the aggregator — all in host Python. The paper's
+main experimental surface (the Fig. 2 heterogeneity×delay grid, the Fig. 3
+dropout/τ_algo study, Fig. a.1 stability bands, and the lr-tuning grids in
+benchmarks/common.py) is thousands of such runs.
+
+This engine scans the full protocol on device:
+
+  1. **Host randomness precompute** — like the event engine's schedule
+     (repro/core/delays.py), the protocol's randomness never depends on model
+     values, so it is materialised up front as per-event arrays:
+     ``gumbels[e]`` (one Gumbel row per event, for categorical client
+     sampling via argmax), ``tau_raw[e]`` (Exp(β) staleness draws, pre-cap)
+     and a ``dropped`` mask (the permanent-dropout set, drawn once). See
+     `build_staleness_randomness`.
+  2. **Device scan** — a ``(tau_max+1, d)`` **ring buffer** of recent models
+     is carried through the scan with a write cursor that advances on emitted
+     updates. The stale read is ``ring[(cursor − clamp(τ)) mod (tau_max+1)]``,
+     exactly `history[-(τ+1)]` in the host deque. Client sampling is a traced
+     categorical: ``argmax(logits + gumbels[e])`` with speed-skew
+     log-probabilities; **permanent dropout is a traced-t trigger** — a
+     ``t >= dropout_at`` where-mask folded into the sampling logits, so the
+     Fig. 3 study runs inside the scan (previously host-only).
+
+The runner takes the server learning rate as a *runtime* scalar (unless a
+schedule callable is baked in), so one compiled runner vmaps over seeds *and*
+over the lr-tuning grid: `run_staleness_seeds` / `run_staleness_grid` batch
+whole sweeps into a single XLA computation.
+
+Equivalence contract: `StalenessSimulator(..., replay=rand)` consumes the
+same randomness arrays event-for-event, so given the same seed the host and
+scanned trajectories match to ≤1e-5 — including dropout and speed-skew runs
+(tests/test_scan_staleness.py pins all five algorithms).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
+from repro.core.scan_engine import (ScanResult, _payload_chain, _to_result,
+                                    default_n_events)
+from repro.core.staleness_sim import default_tau_max, staleness_client_probs
+
+
+@dataclasses.dataclass
+class StalenessRandomness:
+    """Per-event randomness for one run — everything the protocol draws that
+    does not depend on model values. Consumed identically by the device scan
+    and by `StalenessSimulator(..., replay=...)` (seed-matched replay)."""
+    gumbels: jnp.ndarray    # (n_events, n) f32 — categorical sampling noise
+    tau_raw: jnp.ndarray    # (n_events,)  f32 — Exp(β) staleness draws, pre-cap
+    dropped: jnp.ndarray    # (n,) bool — permanent-dropout set (False if none)
+
+    @property
+    def n_events(self) -> int:
+        return self.tau_raw.shape[0]
+
+
+def build_staleness_randomness(seed: int, n_events: int, n_clients: int,
+                               beta: float, dropout_frac: float = 0.0,
+                               speed_skew: float = 0.0) -> StalenessRandomness:
+    """Materialise the protocol's random stream from `seed`. The dropout set
+    is drawn without replacement weighted by the (speed-skew) participation
+    probabilities, mirroring the host simulator's `rng.choice(..., p=probs)`."""
+    root = jax.random.PRNGKey(seed)
+    kg, kt, kd = (jax.random.fold_in(root, c) for c in (101, 102, 103))
+    gumbels = jax.random.gumbel(kg, (n_events, n_clients), jnp.float32)
+    tau_raw = jax.random.exponential(kt, (n_events,), jnp.float32) * beta
+    dropped = jnp.zeros((n_clients,), jnp.bool_)
+    k = int(dropout_frac * n_clients)
+    if k > 0:
+        probs = jnp.asarray(staleness_client_probs(n_clients, speed_skew))
+        idx = jax.random.choice(kd, n_clients, (k,), replace=False, p=probs)
+        dropped = dropped.at[idx].set(True)
+    return StalenessRandomness(gumbels, tau_raw, dropped)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer model history: the bounded deque, scannable.
+# ---------------------------------------------------------------------------
+
+def ring_read(ring: jnp.ndarray, cursor, tau):
+    """``history[-(tau+1)]``: the model τ emitted updates ago. `cursor` is the
+    slot holding the newest model; requires τ ≤ min(t, capacity−1)."""
+    slot = jnp.mod(cursor - tau, ring.shape[0])
+    return jax.lax.dynamic_index_in_dim(ring, slot, keepdims=False)
+
+
+def ring_append(ring: jnp.ndarray, cursor, w, emit):
+    """``history.append(w)`` gated on `emit`: advance the cursor and write.
+    When not emitting, cursor stays and `w` (unchanged) rewrites its own slot,
+    so the write can be unconditional — trace-safe without a select on the
+    full buffer."""
+    cursor = jnp.where(emit, jnp.mod(cursor + 1, ring.shape[0]), cursor)
+    return jax.lax.dynamic_update_index_in_dim(ring, w, cursor, 0), cursor
+
+
+# ---------------------------------------------------------------------------
+
+def make_staleness_runner(*, grad_fn: Callable, params0,
+                          aggregator: Aggregator, n_clients: int, T: int,
+                          beta: float,
+                          server_lr: Optional[Callable] = None,
+                          tau_max: Optional[int] = None,
+                          speed_skew: float = 0.0,
+                          dropout_at: Optional[int] = None,
+                          local_steps: int = 1, local_lr: float = 0.05,
+                          init_cache_grads: bool = True,
+                          record_w: bool = False):
+    """Build the jitted runner
+    ``run(key, gumbels, tau_raw, dropped, lr) -> (w, state, outs)``.
+
+    `lr` is a traced f32 scalar (constant server lr) so one compiled runner
+    serves the whole lr-tuning grid; pass a callable `server_lr` to bake an
+    iteration schedule instead (the runtime `lr` is then ignored). `grad_fn`
+    must be trace-safe in `client`. The event count is the leading axis of
+    the ``gumbels``/``tau_raw`` inputs (see `build_staleness_randomness`).
+    vmap the runner over stacked ``(key, gumbels, tau_raw, dropped, lr)``
+    for seed/grid sweeps."""
+    n = n_clients
+    flat0, unravel = ravel_pytree(params0)
+    w0 = jnp.asarray(flat0, jnp.float32)
+    d = w0.size
+    agg = aggregator
+    tau_max = tau_max if tau_max is not None else default_tau_max(beta)
+    S = tau_max + 1
+    wants_init = init_cache_grads and wants_cache_init(agg)
+    payload_fn = _payload_chain(grad_fn, unravel, local_steps, local_lr)
+    log_probs = jnp.asarray(
+        np.log(staleness_client_probs(n, speed_skew)), jnp.float32)
+    if server_lr is not None and not callable(server_lr):
+        raise TypeError("pass constant lrs at call time; server_lr is for "
+                        "iteration schedules (callable) only")
+    lr_of_t = ((lambda t, lr: server_lr(t)) if server_lr is not None
+               else (lambda t, lr: lr))
+
+    def _run(key, gumbels, tau_raw, dropped, lr):
+        lr = jnp.asarray(lr, jnp.float32)
+        w = w0
+        if wants_init:
+            def init_step(key, client):
+                p, _, key = payload_fn(w0, client, key)
+                return key, p
+            key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n))
+            state = agg.init_state(n, d, init_rows)
+            # paper Alg. 1 line 4-5: apply u^0 before the loop
+            w = w - lr_of_t(0, lr) * jnp.mean(init_rows, 0)
+            t0 = 1
+        else:
+            state = agg.init_state(n, d, None)
+            t0 = 0
+
+        ring = jnp.zeros((S, d), jnp.float32).at[0].set(w0)
+        cursor = jnp.asarray(0, jnp.int32)
+        if wants_init:           # history = [w^0, w^1] after the init update
+            ring, cursor = ring_append(ring, cursor, w, True)
+
+        carry0 = {"w": w, "key": key, "state": state,
+                  "t": jnp.asarray(t0, jnp.int32),
+                  "ring": ring, "cursor": cursor}
+
+        def step(carry, ev):
+            g_row, traw = ev
+            t = carry["t"]
+            # dropout: traced-t trigger folded into the sampling logits
+            if dropout_at is not None:
+                gone = jnp.logical_and(dropped, t >= dropout_at)
+                logits = jnp.where(gone, -jnp.inf, log_probs)
+                # every client dropped: the host reference stops the run; the
+                # scan freezes instead (no emissions, model held) so the
+                # final w still matches
+                any_alive = jnp.any(~gone)
+            else:
+                logits = log_probs
+                any_alive = jnp.asarray(True)
+            j = jnp.argmax(logits + g_row).astype(jnp.int32)
+            tau = jnp.minimum(jnp.floor(traw).astype(jnp.int32),
+                              jnp.minimum(tau_max, t))
+            w_stale = ring_read(carry["ring"], carry["cursor"], tau)
+            payload, loss, key = payload_fn(w_stale, j, carry["key"])
+            state, u, emit, lr_scale = agg.step(
+                carry["state"], Arrival(j, payload, t, tau))
+            emit = jnp.logical_and(emit, jnp.logical_and(t < T, any_alive))
+            eta = lr_of_t(t, lr) * lr_scale
+            w = jnp.where(emit, carry["w"] - eta * u, carry["w"])
+            ring, cursor = ring_append(carry["ring"], carry["cursor"], w, emit)
+            out = {"loss": loss, "emit": emit, "t": t,
+                   "unorm": jnp.linalg.norm(u), "alive": any_alive}
+            if record_w:
+                out["w"] = w
+            carry = {"w": w, "key": key, "state": state,
+                     "t": t + emit.astype(jnp.int32),
+                     "ring": ring, "cursor": cursor}
+            return carry, out
+
+        carry, outs = jax.lax.scan(step, carry0, (gumbels, tau_raw))
+        return carry["w"], carry["state"], outs
+
+    return jax.jit(_run)
+
+
+def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
+                       n_clients: int, server_lr, T: int, beta: float = 5.0,
+                       tau_max: Optional[int] = None, speed_skew: float = 0.0,
+                       dropout_frac: float = 0.0,
+                       dropout_at: Optional[int] = None,
+                       n_events: Optional[int] = None, local_steps: int = 1,
+                       local_lr: float = 0.05, init_cache_grads: bool = True,
+                       seed: int = 0, record_w: bool = False) -> ScanResult:
+    """One device-resident run, trajectory-equivalent to
+    ``StalenessSimulator(..., replay=build_staleness_randomness(seed, ...))``
+    given the same arguments."""
+    if n_events is None:
+        n_events = default_n_events(aggregator, T, init_cache_grads)
+    rand = build_staleness_randomness(seed, n_events, n_clients, beta,
+                                      dropout_frac, speed_skew)
+    runner = make_staleness_runner(
+        grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+        n_clients=n_clients, T=T, beta=beta,
+        server_lr=server_lr if callable(server_lr) else None,
+        tau_max=tau_max, speed_skew=speed_skew, dropout_at=dropout_at,
+        local_steps=local_steps, local_lr=local_lr,
+        init_cache_grads=init_cache_grads, record_w=record_w)
+    lr = jnp.float32(0.0 if callable(server_lr) else server_lr)
+    w, _, outs = runner(jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
+                        rand.dropped, lr)
+    wants_init = init_cache_grads and wants_cache_init(aggregator)
+    return _to_result(w, outs, T, n_clients if wants_init else 0)
+
+
+def _staleness_batch(seeds: Sequence[int], *, n_events: int, n_clients: int,
+                     beta: float, dropout_frac: float, speed_skew: float):
+    """Stack per-seed randomness and PRNG keys on host (pure precompute)."""
+    keys, gum, tau, drp = [], [], [], []
+    for s in seeds:
+        r = build_staleness_randomness(s, n_events, n_clients, beta,
+                                       dropout_frac, speed_skew)
+        keys.append(jax.random.PRNGKey(s))
+        gum.append(r.gumbels)
+        tau.append(r.tau_raw)
+        drp.append(r.dropped)
+    return (jnp.stack(keys), jnp.stack(gum), jnp.stack(tau), jnp.stack(drp))
+
+
+def _staleness_results(ws, outs, n_runs: int, T: int,
+                       n_init: int) -> List[ScanResult]:
+    jax.block_until_ready(ws)
+    return [_to_result(ws[i], jax.tree.map(lambda o: o[i], outs), T, n_init)
+            for i in range(n_runs)]
+
+
+def run_staleness_seeds(*, grad_fn: Callable, params0,
+                        aggregator: Aggregator, n_clients: int, server_lr,
+                        T: int, seeds: Sequence[int], beta: float = 5.0,
+                        tau_max: Optional[int] = None, speed_skew: float = 0.0,
+                        dropout_frac: float = 0.0,
+                        dropout_at: Optional[int] = None,
+                        n_events: Optional[int] = None, local_steps: int = 1,
+                        local_lr: float = 0.05, init_cache_grads: bool = True,
+                        runner=None) -> List[ScanResult]:
+    """vmap one compiled runner over seeds — the whole batch of staleness
+    trajectories is one XLA computation. Pass `runner` (a
+    `make_staleness_runner` result with matching statics) to reuse a compiled
+    runner across calls, e.g. across an lr grid."""
+    if n_events is None:
+        n_events = default_n_events(aggregator, T, init_cache_grads)
+    batch = _staleness_batch(seeds, n_events=n_events, n_clients=n_clients,
+                             beta=beta, dropout_frac=dropout_frac,
+                             speed_skew=speed_skew)
+    if runner is None:
+        runner = make_staleness_runner(
+            grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+            n_clients=n_clients, T=T, beta=beta,
+            server_lr=server_lr if callable(server_lr) else None,
+            tau_max=tau_max, speed_skew=speed_skew, dropout_at=dropout_at,
+            local_steps=local_steps, local_lr=local_lr,
+            init_cache_grads=init_cache_grads)
+    lr = 0.0 if callable(server_lr) else float(server_lr)
+    lrs = jnp.full((len(seeds),), lr, jnp.float32)
+    ws, _, outs = jax.vmap(runner)(*batch, lrs)
+    wants_init = init_cache_grads and wants_cache_init(aggregator)
+    return _staleness_results(ws, outs, len(seeds), T,
+                              n_clients if wants_init else 0)
+
+
+def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
+                       n_clients: int, lrs: Sequence[float], T: int,
+                       seeds: Sequence[int], beta: float = 5.0,
+                       tau_max: Optional[int] = None, speed_skew: float = 0.0,
+                       dropout_frac: float = 0.0,
+                       dropout_at: Optional[int] = None,
+                       n_events: Optional[int] = None, local_steps: int = 1,
+                       local_lr: float = 0.05, init_cache_grads: bool = True,
+                       runner=None) -> List[List[ScanResult]]:
+    """The lr-tuning grid × seed sweep as ONE vmapped computation: per-seed
+    randomness is tiled across the lr axis (same trajectories, different
+    step sizes — exactly the host grid in benchmarks/common.py `tuned`).
+    Returns ``results[i_lr][i_seed]``."""
+    if n_events is None:
+        n_events = default_n_events(aggregator, T, init_cache_grads)
+    keys, gum, tau, drp = _staleness_batch(
+        seeds, n_events=n_events, n_clients=n_clients, beta=beta,
+        dropout_frac=dropout_frac, speed_skew=speed_skew)
+    L, ns = len(lrs), len(seeds)
+    tile = lambda a: jnp.concatenate([a] * L, 0)
+    lr_vec = jnp.repeat(jnp.asarray(lrs, jnp.float32), ns)
+    if runner is None:
+        runner = make_staleness_runner(
+            grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+            n_clients=n_clients, T=T, beta=beta,
+            tau_max=tau_max, speed_skew=speed_skew, dropout_at=dropout_at,
+            local_steps=local_steps, local_lr=local_lr,
+            init_cache_grads=init_cache_grads)
+    ws, _, outs = jax.vmap(runner)(tile(keys), tile(gum), tile(tau),
+                                   tile(drp), lr_vec)
+    wants_init = init_cache_grads and wants_cache_init(aggregator)
+    flat = _staleness_results(ws, outs, L * ns, T,
+                              n_clients if wants_init else 0)
+    return [flat[i * ns:(i + 1) * ns] for i in range(L)]

@@ -25,6 +25,25 @@ from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
 from repro.core.simulator import SimResult
 
 
+def default_tau_max(beta: float) -> int:
+    """History bound when none is given — shared by the host simulator and
+    the scanned engine; covers essentially all Exp(β) draws
+    (P[τ > 6β+20] < e⁻⁶)."""
+    return int(6 * beta + 20)
+
+
+def staleness_client_probs(n_clients: int, speed_skew: float) -> np.ndarray:
+    """Participation probabilities: uniform, or log-spaced speed weights in
+    [1/(1+skew), 1+skew] (normalised) to create participation imbalance.
+    Shared with the scanned engine (repro/core/scan_staleness.py) so both
+    paths sample from the identical distribution."""
+    if speed_skew > 0:
+        w = np.exp(np.linspace(-np.log(1 + speed_skew),
+                               np.log(1 + speed_skew), n_clients))
+        return w / w.sum()
+    return np.full(n_clients, 1.0 / n_clients)
+
+
 class StalenessSimulator:
     def __init__(self, *, grad_fn: Callable, params0, aggregator: Aggregator,
                  n_clients: int, server_lr, beta: float = 5.0,
@@ -32,7 +51,13 @@ class StalenessSimulator:
                  local_steps: int = 1, local_lr: float = 0.05,
                  eval_fn: Optional[Callable] = None, eval_every: int = 50,
                  dropout_frac: float = 0.0, dropout_at: Optional[int] = None,
-                 init_cache_grads: bool = True, seed: int = 0):
+                 init_cache_grads: bool = True, seed: int = 0, replay=None):
+        """`replay` (duck-typed `StalenessRandomness`: .gumbels (E, n),
+        .tau_raw (E,), .dropped (n,)) switches the protocol's random draws
+        from this instance's numpy RNG to a pre-materialised stream — the one
+        the scanned engine consumes — so host and device trajectories can be
+        compared event-for-event. Model/payload RNG (the jax key chain) is
+        unaffected. The run stops early if the replay stream is exhausted."""
         self.grad_fn = grad_fn
         flat, self.unravel = ravel_pytree(params0)
         self.w = np.asarray(flat, np.float32)
@@ -41,7 +66,7 @@ class StalenessSimulator:
         self.n = n_clients
         self.server_lr = server_lr if callable(server_lr) else (lambda t: server_lr)
         self.beta = beta
-        self.tau_max = tau_max if tau_max is not None else int(6 * beta + 20)
+        self.tau_max = tau_max if tau_max is not None else default_tau_max(beta)
         self.K = local_steps
         self.local_lr = local_lr
         self.eval_fn = eval_fn
@@ -51,12 +76,10 @@ class StalenessSimulator:
         self.init_cache_grads = init_cache_grads
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
-        if speed_skew > 0:
-            w_ = np.exp(np.linspace(-np.log(1 + speed_skew),
-                                    np.log(1 + speed_skew), n_clients))
-            self.client_probs = w_ / w_.sum()
-        else:
-            self.client_probs = np.full(n_clients, 1.0 / n_clients)
+        self.replay = replay
+        self.client_probs = staleness_client_probs(n_clients, speed_skew)
+        # f32 logits matching the device scan bit-for-bit (argmax ties)
+        self._log_probs = np.log(self.client_probs).astype(np.float32)
 
     def _payload(self, w_flat: np.ndarray, client: int):
         self.key, sub = jax.random.split(self.key)
@@ -94,20 +117,41 @@ class StalenessSimulator:
         dropped: set = set()
         res = SimResult([], [], [], [], 0, [])
         probs = self.client_probs.copy()
+        replay = self.replay
+        if replay is not None:                  # hoist device->host transfers
+            r_gumbels = np.asarray(replay.gumbels, np.float32)
+            r_tau_raw = np.asarray(replay.tau_raw, np.float32)
+            r_dropped = np.asarray(replay.dropped)
+            n_replay = r_tau_raw.shape[0]
+        e = 0                                   # replay event cursor
         while t < T:
+            if replay is not None and e >= n_replay:
+                break                           # replay stream exhausted
             if (self.dropout_at is not None and t >= self.dropout_at
                     and self.dropout_frac > 0 and not dropped):
                 k = int(self.dropout_frac * n)
-                dropped = set(self.rng.choice(n, size=k, replace=False,
-                                              p=probs).tolist())
+                if replay is not None:
+                    dropped = set(np.flatnonzero(r_dropped).tolist())
+                else:
+                    dropped = set(self.rng.choice(n, size=k, replace=False,
+                                                  p=probs).tolist())
                 alive = np.array([p if i not in dropped else 0.0
                                   for i, p in enumerate(self.client_probs)])
                 if alive.sum() == 0:
                     break
                 probs = alive / alive.sum()
-            j = int(self.rng.choice(n, p=probs))
-            tau = min(int(self.rng.exponential(self.beta)),
-                      self.tau_max, len(history) - 1)
+            if replay is not None:
+                # identical f32 arithmetic to the scanned engine: unnormalised
+                # log-probs masked to -inf, argmax over logits + Gumbel row
+                logits = np.where(probs > 0, self._log_probs,
+                                  -np.inf).astype(np.float32)
+                j = int(np.argmax(logits + r_gumbels[e]))
+                tau = min(int(r_tau_raw[e]), self.tau_max, len(history) - 1)
+            else:
+                j = int(self.rng.choice(n, p=probs))
+                tau = min(int(self.rng.exponential(self.beta)),
+                          self.tau_max, len(history) - 1)
+            e += 1
             w_stale = history[-(tau + 1)]
             payload, loss = self._payload(w_stale, j)
             total_comms += 1

@@ -1,0 +1,218 @@
+"""Scanned-staleness engine: trajectory equivalence against the host
+`StalenessSimulator` under seed-matched RNG replay (all five algorithms,
+with/without dropout, speed-skew, both τ-cap regimes), ring-buffer vs deque
+semantics, and the seed/lr-grid vmap paths."""
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregators import (ACED, ACEIncremental, CA2FL, FedBuff,
+                                    VanillaASGD)
+from repro.core.scan_engine import default_n_events
+from repro.core.scan_staleness import (build_staleness_randomness,
+                                       make_staleness_runner, ring_append,
+                                       ring_read, run_staleness_grid,
+                                       run_staleness_scan,
+                                       run_staleness_seeds)
+from repro.core.staleness_sim import StalenessSimulator
+
+
+def quad_grad_fn(n, d, zeta=2.0, sigma=0.2, seed=0):
+    rng = np.random.default_rng(seed)
+    C = jnp.asarray(rng.normal(size=(n, d)) * zeta)
+
+    def grad_fn(params, client, key):
+        g = params - C[client] + sigma * jax.random.normal(key, (d,))
+        return 0.5 * jnp.sum((params - C[client]) ** 2), g
+    return grad_fn
+
+
+AGGS = {
+    "asgd": lambda: VanillaASGD(),
+    "fedbuff": lambda: FedBuff(buffer_size=4),
+    "ca2fl": lambda: CA2FL(buffer_size=4),
+    "ace": lambda: ACEIncremental(),
+    "aced": lambda: ACED(tau_algo=5),
+}
+
+
+def _host_and_scan(algo, *, n=8, d=6, T=40, beta=2.0, seed=0, tau_max=None,
+                   speed_skew=0.0, dropout_frac=0.0, dropout_at=None,
+                   server_lr=0.05):
+    """Run host (replay mode) and scan on the same random stream."""
+    grad_fn = quad_grad_fn(n, d)
+    n_events = default_n_events(AGGS[algo](), T)
+    rand = build_staleness_randomness(seed, n_events, n, beta, dropout_frac,
+                                      speed_skew)
+    sim = StalenessSimulator(
+        grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=AGGS[algo](),
+        n_clients=n, server_lr=server_lr, beta=beta, tau_max=tau_max,
+        speed_skew=speed_skew, dropout_frac=dropout_frac,
+        dropout_at=dropout_at, seed=seed, replay=rand)
+    hr = sim.run(T)
+    sr = run_staleness_scan(
+        grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=AGGS[algo](),
+        n_clients=n, server_lr=server_lr, T=T, beta=beta, tau_max=tau_max,
+        speed_skew=speed_skew, dropout_frac=dropout_frac,
+        dropout_at=dropout_at, seed=seed)
+    return sim, hr, sr
+
+
+def _assert_equivalent(sim, hr, sr):
+    assert np.max(np.abs(sr.w - np.asarray(sim.w))) <= 1e-5
+    assert len(sr.losses) == len(hr.losses)
+    np.testing.assert_allclose(sr.losses, hr.losses, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sr.update_norms, hr.update_norms,
+                               rtol=1e-4, atol=1e-5)
+    assert sr.ts.tolist() == hr.ts
+    assert sr.total_comms == hr.total_comms
+
+
+@pytest.mark.parametrize("algo", sorted(AGGS))
+def test_staleness_scan_matches_host(algo):
+    """Same seed => host replay and scan trajectories agree to <= 1e-5."""
+    _assert_equivalent(*_host_and_scan(algo))
+
+
+@pytest.mark.parametrize("algo", ["aced", "asgd", "fedbuff"])
+def test_staleness_scan_matches_host_with_dropout(algo):
+    """Permanent dropout at T/2: traced-t logits mask == host dropped set."""
+    sim, hr, sr = _host_and_scan(algo, n=10, T=60, dropout_frac=0.5,
+                                 dropout_at=30)
+    _assert_equivalent(sim, hr, sr)
+
+
+@pytest.mark.parametrize("algo", ["ace", "ca2fl", "asgd"])
+def test_staleness_scan_matches_host_speed_skew(algo):
+    """speed_skew>0: weighted categorical sampling (participation imbalance)."""
+    _assert_equivalent(*_host_and_scan(algo, speed_skew=2.0))
+
+
+def test_staleness_scan_dropout_plus_skew():
+    """The Fig. 3 worst case: imbalanced sampling AND a skew-weighted dropout
+    set drawn from the same stream."""
+    sim, hr, sr = _host_and_scan("aced", n=10, T=60, speed_skew=1.5,
+                                 dropout_frac=0.3, dropout_at=20)
+    _assert_equivalent(sim, hr, sr)
+    assert len(sr.losses) == 59          # cache init consumes iteration 0
+
+
+def test_staleness_scan_all_dropped_freezes_like_host_stop():
+    """dropout_frac=1.0: the host reference breaks out of the loop; the scan
+    gates every later emission, so the final model still matches."""
+    sim, hr, sr = _host_and_scan("asgd", n=6, T=40, dropout_frac=1.0,
+                                 dropout_at=15)
+    assert len(hr.losses) == 15                  # host stopped at the trigger
+    _assert_equivalent(sim, hr, sr)              # incl. comms: frozen events
+    assert sr.total_comms == 15                  # are not counted as popped
+
+
+def test_staleness_scan_tau_capped_at_tau_max():
+    """beta >> tau_max: nearly every draw hits the tau_max clamp."""
+    _assert_equivalent(*_host_and_scan("asgd", beta=50.0, tau_max=7, T=30))
+
+
+def test_staleness_scan_tau_capped_by_history_length():
+    """Early iterations: tau is clamped to the t models that exist, i.e. the
+    deque's len(history)-1 — the ring must never read unwritten slots."""
+    _assert_equivalent(*_host_and_scan("ace", beta=30.0, T=25))
+
+
+def test_staleness_dropout_shrinks_participation():
+    """After dropout_at, dropped clients never arrive again in the scan."""
+    n, d, T = 10, 5, 80
+    grad_fn = quad_grad_fn(n, d)
+    n_events = default_n_events(VanillaASGD(), T)
+    rand = build_staleness_randomness(3, n_events, n, 2.0, 0.5, 0.0)
+    runner = make_staleness_runner(
+        grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=VanillaASGD(),
+        n_clients=n, T=T, beta=2.0, dropout_at=T // 2,
+        record_w=True)
+    w, _, outs = runner(jax.random.PRNGKey(3), rand.gumbels, rand.tau_raw,
+                        rand.dropped, jnp.float32(0.05))
+    # recover arrivals from the logits the scan used
+    dropped = np.asarray(rand.dropped)
+    logp = np.log(np.full(n, 1.0 / n)).astype(np.float32)
+    g = np.asarray(rand.gumbels)
+    ts = np.asarray(outs["t"])
+    late = ts >= T // 2
+    arrive_late = np.argmax(np.where(dropped, -np.inf, logp) + g[late], axis=1)
+    assert not set(arrive_late.tolist()) & set(np.flatnonzero(dropped))
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer == deque semantics
+# ---------------------------------------------------------------------------
+
+def _ring_vs_deque(emits, taus, tau_max, d=3):
+    """Drive ring_read/ring_append and a deque(maxlen=tau_max+1) through the
+    same emit/τ sequence; every read must match history[-(τ+1)]."""
+    S = tau_max + 1
+    val = lambda k: np.full(d, float(k), np.float32)   # model after k updates
+    ring = jnp.zeros((S, d), jnp.float32).at[0].set(val(0))
+    cursor = jnp.asarray(0, jnp.int32)
+    history = deque(maxlen=S)
+    history.append(val(0))
+    t = 0
+    for emit, tau in zip(emits, taus):
+        tau_eff = min(tau, tau_max, len(history) - 1)
+        got = np.asarray(ring_read(ring, cursor, jnp.asarray(tau_eff)))
+        np.testing.assert_array_equal(got, history[-(tau_eff + 1)])
+        if emit:
+            t += 1
+            history.append(val(t))
+            ring, cursor = ring_append(ring, cursor, jnp.asarray(val(t)),
+                                       jnp.asarray(True))
+        else:
+            ring, cursor = ring_append(
+                ring, cursor, jnp.asarray(val(t)), jnp.asarray(False))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_ring_buffer_matches_deque_random_sequences(seed):
+    rng = np.random.default_rng(seed)
+    tau_max = int(rng.integers(1, 9))
+    n_steps = 60
+    emits = rng.random(n_steps) < 0.7
+    taus = rng.integers(0, 3 * tau_max, size=n_steps)
+    _ring_vs_deque(emits.tolist(), taus.tolist(), tau_max)
+
+
+# ---------------------------------------------------------------------------
+# vmap over seeds and the lr grid
+# ---------------------------------------------------------------------------
+
+def test_staleness_vmap_seeds_matches_single_runs():
+    n, d, T = 6, 5, 20
+    grad_fn = quad_grad_fn(n, d)
+    seeds = [1, 2, 3]
+    batch = run_staleness_seeds(grad_fn=grad_fn, params0=jnp.zeros(d),
+                                aggregator=ACEIncremental(), n_clients=n,
+                                server_lr=0.05, T=T, seeds=seeds, beta=2.0)
+    for s, br in zip(seeds, batch):
+        single = run_staleness_scan(grad_fn=grad_fn, params0=jnp.zeros(d),
+                                    aggregator=ACEIncremental(), n_clients=n,
+                                    server_lr=0.05, T=T, beta=2.0, seed=s)
+        np.testing.assert_allclose(br.w, single.w, rtol=1e-6, atol=1e-6)
+        assert br.total_comms == single.total_comms
+
+
+def test_staleness_grid_matches_per_lr_runs():
+    """One vmapped grid call == independent per-lr seed sweeps."""
+    n, d, T = 6, 5, 20
+    grad_fn = quad_grad_fn(n, d)
+    lrs, seeds = [0.02, 0.05, 0.1], [1, 2]
+    grid = run_staleness_grid(grad_fn=grad_fn, params0=jnp.zeros(d),
+                              aggregator=FedBuff(buffer_size=3), n_clients=n,
+                              lrs=lrs, T=T, seeds=seeds, beta=2.0)
+    assert len(grid) == len(lrs) and all(len(g) == len(seeds) for g in grid)
+    for lr, results in zip(lrs, grid):
+        singles = run_staleness_seeds(grad_fn=grad_fn, params0=jnp.zeros(d),
+                                      aggregator=FedBuff(buffer_size=3),
+                                      n_clients=n, server_lr=lr, T=T,
+                                      seeds=seeds, beta=2.0)
+        for br, sr in zip(results, singles):
+            np.testing.assert_allclose(br.w, sr.w, rtol=1e-6, atol=1e-6)

@@ -23,8 +23,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
                                     DelayAdaptiveASGD, FedBuff, VanillaASGD)
-from repro.core.scan_engine import default_n_events
-from repro.core.scan_staleness import (make_staleness_runner,
+from repro.core.scan_staleness import (eval_marks_for, make_staleness_runner,
                                        run_staleness_grid,
                                        run_staleness_seeds)
 from repro.core.staleness_sim import StalenessSimulator, default_tau_max
@@ -48,21 +47,34 @@ def algo_suite(beta: float, M: int = 10, tau_algo: Optional[int] = None,
     ]
 
 
-# one compiled runner per (task, algorithm, protocol statics): lr is a runtime
-# scalar, so every lr-grid point and seed reuses the same XLA executable.
+# one cached runner per (task, algorithm, protocol statics): lr and the
+# availability windows are runtime inputs, so every lr-grid point, seed and
+# dropout fraction reuses the same XLA executable (jit compiles one extra
+# executable per distinct event-budget shape, e.g. re-join rows' freeze
+# slack).
 # The task is kept in the entry: id(task) keying alone would let a freed
 # task's address be reused by a new one and silently hit the stale runner.
 _RUNNER_CACHE: Dict[tuple, tuple] = {}
 
 
-def _scan_runner(task, agg, *, T, n_events, beta, speed_skew, dropout_at):
-    key = (id(task), repr(agg), T, n_events, default_tau_max(beta),
-           speed_skew, dropout_at)
+def clear_runner_cache() -> None:
+    """Drop every cached compiled runner. Cache entries pin their task (data
+    arrays) and XLA executables alive; benchmarks/run.py calls this between
+    suites so one suite's tasks don't stay resident for the whole process."""
+    _RUNNER_CACHE.clear()
+
+
+def _scan_runner(task, agg, *, T, beta, speed_skew=0.0, local_steps=1,
+                 local_lr=0.05, eval_marks=None):
+    # the key carries every static baked into the compiled runner
+    key = (id(task), repr(agg), T, default_tau_max(beta), speed_skew,
+           local_steps, local_lr, eval_marks)
     if key not in _RUNNER_CACHE:
         _RUNNER_CACHE[key] = (task, make_staleness_runner(
             grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
-            n_clients=task.n_clients, T=T, beta=beta,
-            speed_skew=speed_skew, dropout_at=dropout_at))
+            n_clients=task.n_clients, T=T, beta=beta, speed_skew=speed_skew,
+            local_steps=local_steps, local_lr=local_lr,
+            eval_marks=eval_marks))
     return _RUNNER_CACHE[key][1]
 
 
@@ -70,70 +82,110 @@ def _acc_of(ev: Dict) -> float:
     return ev.get("accuracy", -ev.get("dist", 0.0))
 
 
-def _summarize(task, results, wall: float) -> Dict:
+def _unorm_cv(update_norms) -> Optional[float]:
+    """Tail CV of the update norms; None when the run froze before producing
+    a tail (all clients inside their windows) — np.std/np.mean on an empty
+    slice would emit RuntimeWarnings and NaN into the bench JSON."""
+    tail = update_norms[len(update_norms) // 2:]
+    if len(tail) == 0:
+        return None
+    return float(np.std(tail) / (np.mean(tail) + 1e-9))
+
+
+def _eval_curve(results) -> Dict:
+    """Seed-mean accuracy trajectory at each eval mark reached by all seeds
+    (works for both ScanResult and SimResult)."""
+    curves = [r for r in results if r.eval_ts]
+    if not curves:
+        return {}
+    by_t: Dict[int, list] = {}
+    for r in curves:
+        for t, ev in zip(r.eval_ts, r.evals):
+            by_t.setdefault(int(t), []).append(_acc_of(ev))
+    ts = sorted(t for t, v in by_t.items() if len(v) == len(curves))
+    return {"eval_ts": ts,
+            "eval_accs": [float(np.mean(by_t[t])) for t in ts]}
+
+
+def _final_acc(task, unravel, r, T) -> float:
+    """Final-model accuracy; the mark-T snapshot IS the final model, so runs
+    that reached T reuse its eval instead of a second full test-set pass."""
+    if T is not None and r.eval_ts and r.eval_ts[-1] == T:
+        return _acc_of(r.evals[-1])
+    return _acc_of(task.eval_fn(unravel(jnp.asarray(r.w))))
+
+
+def _summarize(task, results, wall: float, T: Optional[int] = None) -> Dict:
     """Per-seed ScanResults -> benchmark row: final-eval accuracy per seed,
-    comms aggregated across seeds, update-norm tail CV per seed."""
+    comms aggregated across seeds, update-norm tail CV per seed, plus the
+    seed-mean eval trajectory when an eval cadence was requested."""
     unravel = ravel_pytree(task.params0)[1]
-    accs = [_acc_of(task.eval_fn(unravel(jnp.asarray(r.w)))) for r in results]
-    unorm_cvs = []
-    for r in results:
-        tail = r.update_norms[len(r.update_norms) // 2:]
-        unorm_cvs.append(float(np.std(tail) / (np.mean(tail) + 1e-9)))
+    accs = [_final_acc(task, unravel, r, T) for r in results]
+    unorm_cvs = [_unorm_cv(r.update_norms) for r in results]
     iters = sum(max(len(r.losses), 1) for r in results)
     return {"acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
             "accs": [float(a) for a in accs],
             "us_per_iter": wall / iters * 1e6,
             "comms": float(np.mean([r.total_comms for r in results])),
-            "unorm_cvs": unorm_cvs}
+            "unorm_cvs": unorm_cvs, **_eval_curve(results)}
 
 
 def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
-             seeds=(1,), dropout_frac=0.0, dropout_at=None,
-             speed_skew=0.0, eval_every=None, engine="scan") -> Dict:
-    """`eval_every` only affects ``engine="host"`` (periodic SimResult.evals);
-    the scan path evaluates the final model only — an in-scan eval cadence is
-    a ROADMAP follow-up."""
+             seeds=(1,), dropout_frac=0.0, dropout_at=None, rejoin_at=None,
+             windows=None, speed_skew=0.0, eval_every=None,
+             local_steps=1, local_lr=0.05, engine="scan") -> Dict:
+    """With `eval_every`, the row carries the accuracy *trajectory*
+    ("eval_ts"/"eval_accs") — device-resident on the scan path via the
+    in-scan snapshot cadence. `rejoin_at`/`windows` run leave/re-join
+    availability scenarios (TimelyFL-style) on either engine."""
     if engine == "host":
         return _run_algo_host(task, agg_factory, T=T, beta=beta, lr=lr,
                               seeds=seeds, dropout_frac=dropout_frac,
-                              dropout_at=dropout_at, speed_skew=speed_skew,
+                              dropout_at=dropout_at, rejoin_at=rejoin_at,
+                              windows=windows, speed_skew=speed_skew,
                               eval_every=eval_every)
     agg = agg_factory()
-    n_events = default_n_events(agg, T)
-    runner = _scan_runner(task, agg, T=T, n_events=n_events, beta=beta,
-                          speed_skew=speed_skew, dropout_at=dropout_at)
+    marks = eval_marks_for(T, eval_every)
+    runner = _scan_runner(task, agg, T=T, beta=beta, speed_skew=speed_skew,
+                          local_steps=local_steps, local_lr=local_lr,
+                          eval_marks=marks)
     t0 = time.time()
     results = run_staleness_seeds(
         grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
         n_clients=task.n_clients, server_lr=lr, T=T, seeds=seeds, beta=beta,
         speed_skew=speed_skew, dropout_frac=dropout_frac,
-        dropout_at=dropout_at, runner=runner)
-    return _summarize(task, results, time.time() - t0)
+        dropout_at=dropout_at, rejoin_at=rejoin_at, windows=windows,
+        eval_fn=task.eval_fn if marks else None, eval_every=eval_every,
+        local_steps=local_steps, local_lr=local_lr, runner=runner)
+    return _summarize(task, results, time.time() - t0, T=T)
 
 
 def _run_algo_host(task, agg_factory, *, T, beta, lr, seeds, dropout_frac,
-                   dropout_at, speed_skew, eval_every) -> Dict:
+                   dropout_at, speed_skew, eval_every, rejoin_at=None,
+                   windows=None) -> Dict:
     """Reference path: the host StalenessSimulator loop, one run per seed."""
-    accs, unorm_cvs, comms, wall = [], [], [], 0.0
+    accs, unorm_cvs, comms, wall, results = [], [], [], 0.0, []
     for seed in seeds:
         sim = StalenessSimulator(
             grad_fn=task.grad_fn, params0=task.params0,
             aggregator=agg_factory(), n_clients=task.n_clients,
             server_lr=lr, beta=beta, speed_skew=speed_skew,
             eval_fn=task.eval_fn, eval_every=eval_every or T,
-            dropout_frac=dropout_frac, dropout_at=dropout_at, seed=seed)
+            dropout_frac=dropout_frac, dropout_at=dropout_at,
+            rejoin_at=rejoin_at, windows=windows, seed=seed)
         t0 = time.time()
         r = sim.run(T)
         wall += time.time() - t0
+        results.append(r)
         accs.append(_acc_of(r.final_eval()))
-        tail = r.update_norms[len(r.update_norms) // 2:]
-        unorm_cvs.append(float(np.std(tail) / (np.mean(tail) + 1e-9)))
+        unorm_cvs.append(_unorm_cv(r.update_norms))
         comms.append(r.total_comms)
     iters = len(seeds) * max(T, 1)
     return {"acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
             "accs": [float(a) for a in accs],
             "us_per_iter": wall / iters * 1e6,
-            "comms": float(np.mean(comms)), "unorm_cvs": unorm_cvs}
+            "comms": float(np.mean(comms)), "unorm_cvs": unorm_cvs,
+            **_eval_curve(results)}
 
 
 def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
@@ -144,19 +196,22 @@ def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
     lrs = [float(c * np.sqrt(n / T)) for c in c_grid]
     if engine == "scan":
         agg = factory()
-        n_events = default_n_events(agg, T)
-        runner = _scan_runner(task, agg, T=T, n_events=n_events, beta=beta,
+        marks = eval_marks_for(T, kw.get("eval_every"))
+        runner = _scan_runner(task, agg, T=T, beta=beta,
                               speed_skew=kw.get("speed_skew", 0.0),
-                              dropout_at=kw.get("dropout_at"))
+                              eval_marks=marks)
         t0 = time.time()
         grid = run_staleness_grid(
             grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
             n_clients=task.n_clients, lrs=lrs, T=T, seeds=seeds, beta=beta,
             speed_skew=kw.get("speed_skew", 0.0),
             dropout_frac=kw.get("dropout_frac", 0.0),
-            dropout_at=kw.get("dropout_at"), runner=runner)
+            dropout_at=kw.get("dropout_at"),
+            rejoin_at=kw.get("rejoin_at"), windows=kw.get("windows"),
+            eval_fn=task.eval_fn if marks else None,
+            eval_every=kw.get("eval_every"), runner=runner)
         wall = (time.time() - t0) / len(lrs)
-        rows = [_summarize(task, results, wall) for results in grid]
+        rows = [_summarize(task, results, wall, T=T) for results in grid]
     else:
         rows = [run_algo(task, factory, T=T, beta=beta, lr=lr, seeds=seeds,
                          engine=engine, **kw) for lr in lrs]

@@ -1,10 +1,16 @@
 """Paper Fig. 3: (a) dropout robustness — ACED vs conceptual ACE vs CA2FL vs
 Vanilla ASGD for 0–70% permanent dropouts at t = T/2; (b) tau_algo ablation
-(too small -> participation bias; too large -> staleness).
+(too small -> participation bias; too large -> staleness); (c) leave/re-join
+availability windows (TimelyFL-style): the dropped set comes back mid-run.
 
-Dropout runs device-resident: the scanned-staleness engine folds the
-`t >= dropout_at` trigger into the traced sampling logits, so every
-(fraction, algorithm) cell is one compiled scan instead of a host loop."""
+Everything runs device-resident: the scanned-staleness engine folds the
+availability windows (permanent dropout = never-rejoin) into the traced
+sampling logits, and the in-scan eval cadence snapshots the model at each
+mark, so every row carries an accuracy *trajectory* through the dropout /
+re-join points — the actual Fig. 3 story — without a host loop. Windows are
+runtime inputs, so one compiled executable per (algo, T, event budget)
+serves every dropout fraction; the re-join rows add freeze-slack events
+(a different input shape) and compile one more."""
 from __future__ import annotations
 
 import json
@@ -23,18 +29,22 @@ def main(fast=True):
                             batch=5, seed=0)
     lr = 0.2 * np.sqrt(n / T)
     rows = []
-    # (a) dropout sweep
     algos = [("aced", lambda: ACED(tau_algo=10)),
              ("ace", lambda: ACEIncremental()),
              ("ca2fl", lambda: CA2FL(buffer_size=10)),
              ("asgd", lambda: VanillaASGD())]
+    # (a) dropout sweep — eval trajectories through the dropout point
     for frac in (0.0, 0.3, 0.5, 0.7):
         for name, factory in algos:
             M = 10 if name == "ca2fl" else 1
-            r = run_algo(task, factory, T=T // M, beta=beta, lr=lr, seeds=(1,),
-                         dropout_frac=frac, dropout_at=T // M // 2)
+            Tm = T // M
+            r = run_algo(task, factory, T=Tm, beta=beta, lr=lr, seeds=(1,),
+                         dropout_frac=frac, dropout_at=Tm // 2,
+                         eval_every=max(Tm // 8, 1))
             rows.append({"bench": "fig3_dropout", "algo": name,
                          "dropout": frac, "acc": r["acc_mean"],
+                         "eval_ts": r.get("eval_ts"),
+                         "eval_accs": r.get("eval_accs"),
                          "us_per_iter": r["us_per_iter"]})
     # (b) tau_algo ablation at 50% dropout
     for tau in (1, 10, 25, 50, 100):
@@ -42,6 +52,18 @@ def main(fast=True):
                      seeds=(1,), dropout_frac=0.5, dropout_at=T // 2)
         rows.append({"bench": "fig3_tau_ablation", "algo": f"aced_tau{tau}",
                      "tau_algo": tau, "acc": r["acc_mean"],
+                     "us_per_iter": r["us_per_iter"]})
+    # (c) re-join: 50% of clients leave at T/3 and come back at 2T/3 — the
+    # trajectory dips while they are away and should recover after the thaw
+    for name, factory in algos:
+        M = 10 if name == "ca2fl" else 1
+        Tm = T // M
+        r = run_algo(task, factory, T=Tm, beta=beta, lr=lr, seeds=(1,),
+                     dropout_frac=0.5, dropout_at=Tm // 3,
+                     rejoin_at=2 * Tm // 3, eval_every=max(Tm // 8, 1))
+        rows.append({"bench": "fig3_rejoin", "algo": name, "dropout": 0.5,
+                     "acc": r["acc_mean"], "eval_ts": r.get("eval_ts"),
+                     "eval_accs": r.get("eval_accs"),
                      "us_per_iter": r["us_per_iter"]})
     return rows
 

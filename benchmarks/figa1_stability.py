@@ -3,8 +3,9 @@ update-norm volatility. Multi-client aggregation (ACE/ACED) should show the
 narrowest bands; single-client updates (ASGD) the widest.
 
 Runs on the scanned-staleness engine via `run_algo` (all three seeds in one
-vmapped computation); per-seed accuracies and update-norm CVs come straight
-from the shared runner instead of a local host loop."""
+vmapped computation); per-seed accuracies, update-norm CVs AND the seed-mean
+accuracy trajectory (in-scan eval cadence) come straight from the shared
+runner instead of a local host loop."""
 from __future__ import annotations
 
 import json
@@ -27,12 +28,16 @@ def main(fast=True):
                              ("aced", lambda: ACED(tau_algo=10), 1),
                              ("fedbuff", lambda: FedBuff(buffer_size=10), 10),
                              ("asgd", lambda: VanillaASGD(), 1)]:
-        r = run_algo(task, factory, T=T // M, beta=beta, lr=lr,
-                     seeds=(1, 2, 3))
+        Tm = T // M
+        r = run_algo(task, factory, T=Tm, beta=beta, lr=lr,
+                     seeds=(1, 2, 3), eval_every=max(Tm // 5, 1))
+        cvs = [c for c in r["unorm_cvs"] if c is not None]
         rows.append({"bench": "figa1_stability", "algo": name,
                      "acc": r["acc_mean"],
                      "acc_std_over_seeds": r["acc_std"],
-                     "update_norm_cv": float(np.mean(r["unorm_cvs"])),
+                     "update_norm_cv": float(np.mean(cvs)) if cvs else None,
+                     "eval_ts": r.get("eval_ts"),
+                     "eval_accs": r.get("eval_accs"),
                      "us_per_iter": r["us_per_iter"]})
     return rows
 

@@ -52,6 +52,7 @@ def main():
     from benchmarks import (fig2_heterogeneity, fig3_dropout, figa1_stability,
                             figa3_quant, kernels_bench, scan_bench,
                             table_a1_comms, table_a2_bert, table_a3_memory)
+    from benchmarks.common import clear_runner_cache
     suites = {
         "scan": scan_bench.main,
         "fig2": fig2_heterogeneity.main,
@@ -75,6 +76,9 @@ def main():
                 print(f"{s},0,ERROR:{type(e).__name__}:{e}", flush=True)
                 failed.append(s)
                 continue
+            finally:
+                # drop compiled runners (and the tasks they pin) per suite
+                clear_runner_cache()
             for row in rows:
                 row["suite"] = s
                 f.write(json.dumps(row) + "\n")

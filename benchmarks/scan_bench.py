@@ -149,12 +149,12 @@ def _staleness_rows(fast=True):
                                    aggregator=ACEIncremental(), n_clients=n,
                                    T=T, beta=beta)
     args = (jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
-            rand.dropped, jnp.float32(lr))
+            rand.leave_at, rand.rejoin_at, jnp.float32(lr))
     t0 = time.time()
     jax.block_until_ready(runner(*args))
     compile_s = time.time() - t0
     t0 = time.time()
-    w, _, _ = runner(*args)
+    w, _, _, _ = runner(*args)
     jax.block_until_ready(w)
     scan_s = time.time() - t0
     speedup = host_s / max(scan_s, 1e-9)

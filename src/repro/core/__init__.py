@@ -10,8 +10,9 @@ from repro.core.delays import (ExponentialDelays, Schedule, arrival_schedule,
                                build_schedule)
 from repro.core.scan_engine import (ScanResult, make_scan_runner, run_scan,
                                     run_scan_seeds, sweep)
-from repro.core.scan_staleness import (StalenessRandomness,
+from repro.core.scan_staleness import (NEVER, StalenessRandomness,
                                        build_staleness_randomness,
+                                       eval_marks_for,
                                        make_staleness_runner,
                                        run_staleness_grid,
                                        run_staleness_scan,

@@ -60,6 +60,10 @@ class Aggregator:
     """Base: subclasses define init_state / step (pure, trace-safe)."""
     name = "base"
     #: server iterations advance only when an update is emitted
+    #: whether every buffer flush is certain to emit: a rule whose emission
+    #: is data-dependent and genuinely refusable sets this False so the scan
+    #: engines budget extra events (see scan_engine.default_n_events)
+    guaranteed_emit = True
 
     def init_state(self, n: int, d: int, init_grads=None) -> Any:
         raise NotImplementedError
@@ -224,6 +228,12 @@ class ACED(Aggregator):
     tau_algo: int = 10
     cache_dtype: str = "float32"
     name = "aced"
+    #: emit = any(active) looks data-dependent, but emission is in fact
+    #: guaranteed: the arriving client re-enters the active set before the
+    #: any() — t_start[j] = t+1 gives t − t_start[j] = −1 ≤ tau_algo — so
+    #: every processed arrival flushes (guaranteed_emit stays True; the scan
+    #: engines' _to_result raises if an event budget ever starves before T,
+    #: pinned by the fig3 50%-dropout regression test)
 
     def init_state(self, n, d, init_grads=None):
         return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads),

@@ -56,6 +56,11 @@ class ScanResult:
     total_comms: int
     emit: np.ndarray           # (n_events,) raw emission mask
     ws: Optional[np.ndarray] = None   # (n_events, d) model after each event
+    evals: List[Dict] = dataclasses.field(default_factory=list)
+    eval_ts: List[int] = dataclasses.field(default_factory=list)
+
+    def final_eval(self) -> Dict:
+        return self.evals[-1] if self.evals else {}
 
 
 def _payload_chain(grad_fn, unravel, local_steps: int, local_lr: float):
@@ -155,23 +160,48 @@ def make_scan_runner(*, grad_fn: Callable, params0, aggregator: Aggregator,
 def default_n_events(aggregator: Aggregator, T: int,
                      init_cache_grads: bool = True) -> int:
     """Events needed to reach T server iterations: buffered rules emit every
-    `buffer_size`-th arrival; cache-init rules consume iteration 0."""
+    `buffer_size`-th arrival; cache-init rules consume iteration 0. Rules
+    whose emission is not guaranteed per flush (``guaranteed_emit = False``)
+    get headroom so the scan's fixed event budget still reaches T where the
+    host loop — which pops events until t == T — would. (All current rules
+    guarantee emission — ACED's arriving client always re-enters its active
+    set — so none take this branch; _to_result raises if a budget ever
+    starves before T regardless.)"""
     t0 = 1 if (init_cache_grads and wants_cache_init(aggregator)) else 0
-    return max(T - t0, 0) * int(getattr(aggregator, "buffer_size", 1))
+    base = max(T - t0, 0) * int(getattr(aggregator, "buffer_size", 1))
+    if not getattr(aggregator, "guaranteed_emit", True):
+        base += max(base // 2, 16)
+    return base
 
 
-def _to_result(w, outs, T: int, n_init_comms: int) -> ScanResult:
+def _to_result(w, outs, T: int, n_init_comms: int, evals=None,
+               eval_ts=None) -> ScanResult:
     emit = np.asarray(outs["emit"])
     ts = np.asarray(outs["t"])
     popped = ts < T                       # events the host loop would pop
     if "alive" in outs:                   # staleness scan: the host reference
         popped &= np.asarray(outs["alive"])   # stops once all clients drop
     processed = int(np.sum(popped))
+    if emit.size:
+        final_t = int(ts[-1]) + int(emit[-1])
+        alive_end = bool(np.asarray(outs["alive"])[-1]) if "alive" in outs \
+            else True
+        if final_t < T and alive_end:
+            # the host loop would keep popping: the scan's event budget is
+            # too small for this scenario (non-guaranteed emitter without
+            # enough headroom — see default_n_events)
+            raise RuntimeError(
+                f"scan event budget exhausted at t={final_t} < T={T} with "
+                f"clients still available ({emit.size} events); pass a "
+                f"larger n_events or set guaranteed_emit=False on the "
+                f"aggregator for automatic headroom")
     return ScanResult(
         ts=ts[emit], losses=np.asarray(outs["loss"])[emit],
         update_norms=np.asarray(outs["unorm"])[emit],
         w=np.asarray(w), total_comms=n_init_comms + processed, emit=emit,
-        ws=np.asarray(outs["w"]) if "w" in outs else None)
+        ws=np.asarray(outs["w"]) if "w" in outs else None,
+        evals=list(evals) if evals else [],
+        eval_ts=list(eval_ts) if eval_ts else [])
 
 
 def run_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,

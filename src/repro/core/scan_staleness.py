@@ -17,31 +17,45 @@ This engine scans the full protocol on device:
      values, so it is materialised up front as per-event arrays:
      ``gumbels[e]`` (one Gumbel row per event, for categorical client
      sampling via argmax), ``tau_raw[e]`` (Exp(β) staleness draws, pre-cap)
-     and a ``dropped`` mask (the permanent-dropout set, drawn once). See
-     `build_staleness_randomness`.
+     and per-client **availability windows** ``leave_at``/``rejoin_at``
+     (drawn once; permanent dropout = ``rejoin_at = NEVER``, always-on =
+     ``leave_at = NEVER``). See `build_staleness_randomness`.
   2. **Device scan** — a ``(tau_max+1, d)`` **ring buffer** of recent models
      is carried through the scan with a write cursor that advances on emitted
      updates. The stale read is ``ring[(cursor − clamp(τ)) mod (tau_max+1)]``,
      exactly `history[-(τ+1)]` in the host deque. Client sampling is a traced
      categorical: ``argmax(logits + gumbels[e])`` with speed-skew
-     log-probabilities; **permanent dropout is a traced-t trigger** — a
-     ``t >= dropout_at`` where-mask folded into the sampling logits, so the
-     Fig. 3 study runs inside the scan (previously host-only).
+     log-probabilities; **availability is a traced-t window mask** —
+     ``leave_at <= t < rejoin_at`` folded into the sampling logits, so both
+     the Fig. 3 permanent-dropout study and TimelyFL-style leave/re-join
+     dynamics run inside the scan. When *every* client is inside its window
+     the protocol freezes (no arrivals are possible): the scan burns one
+     event, holds the model and aggregator state, and fast-forwards t to the
+     earliest rejoin — the host reference mirrors the same jump, so frozen
+     runs stay event-for-event matched through the thaw.
+  3. **In-scan eval cadence** — an ``(n_marks, d)`` snapshot buffer carried
+     through the scan captures the model whenever an emitted update lands t
+     on an eval mark (the host's ``t % eval_every == 0 or t == T`` cadence).
+     Arbitrary host `eval_fn`s then run post-scan on the snapshots, so
+     `ScanResult.evals`/`eval_ts` match `SimResult` without ever leaving the
+     device mid-run.
 
 The runner takes the server learning rate as a *runtime* scalar (unless a
-schedule callable is baked in), so one compiled runner vmaps over seeds *and*
-over the lr-tuning grid: `run_staleness_seeds` / `run_staleness_grid` batch
+schedule callable is baked in) and the availability windows as *runtime*
+arrays, so one compiled runner vmaps over seeds, the lr-tuning grid AND every
+dropout/re-join scenario: `run_staleness_seeds` / `run_staleness_grid` batch
 whole sweeps into a single XLA computation.
 
 Equivalence contract: `StalenessSimulator(..., replay=rand)` consumes the
 same randomness arrays event-for-event, so given the same seed the host and
-scanned trajectories match to ≤1e-5 — including dropout and speed-skew runs
+scanned trajectories match to ≤1e-5 — including dropout, speed-skew,
+leave/re-join windows and the eval cadence
 (tests/test_scan_staleness.py pins all five algorithms).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +65,8 @@ from jax.flatten_util import ravel_pytree
 from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
 from repro.core.scan_engine import (ScanResult, _payload_chain, _to_result,
                                     default_n_events)
-from repro.core.staleness_sim import default_tau_max, staleness_client_probs
+from repro.core.staleness_sim import (NEVER, default_tau_max,
+                                      staleness_client_probs)
 
 
 @dataclasses.dataclass
@@ -61,30 +76,55 @@ class StalenessRandomness:
     and by `StalenessSimulator(..., replay=...)` (seed-matched replay)."""
     gumbels: jnp.ndarray    # (n_events, n) f32 — categorical sampling noise
     tau_raw: jnp.ndarray    # (n_events,)  f32 — Exp(β) staleness draws, pre-cap
-    dropped: jnp.ndarray    # (n,) bool — permanent-dropout set (False if none)
+    leave_at: jnp.ndarray   # (n,) int32 — iteration each client leaves (NEVER: stays)
+    rejoin_at: jnp.ndarray  # (n,) int32 — iteration it comes back (NEVER: permanent)
 
     @property
     def n_events(self) -> int:
         return self.tau_raw.shape[0]
 
+    @property
+    def dropped(self) -> jnp.ndarray:
+        """(n,) bool — clients that leave at some point (window is armed)."""
+        return self.leave_at < NEVER
+
 
 def build_staleness_randomness(seed: int, n_events: int, n_clients: int,
                                beta: float, dropout_frac: float = 0.0,
-                               speed_skew: float = 0.0) -> StalenessRandomness:
-    """Materialise the protocol's random stream from `seed`. The dropout set
-    is drawn without replacement weighted by the (speed-skew) participation
-    probabilities, mirroring the host simulator's `rng.choice(..., p=probs)`."""
+                               speed_skew: float = 0.0,
+                               dropout_at: Optional[int] = None,
+                               rejoin_at: Optional[int] = None,
+                               windows=None) -> StalenessRandomness:
+    """Materialise the protocol's random stream from `seed`.
+
+    Availability comes from one of (highest precedence first):
+      * ``windows = (leave_at, rejoin_at)`` — explicit (n,) int32 arrays;
+      * ``dropout_frac``/``dropout_at`` (+ optional scalar ``rejoin_at``) —
+        the dropout set is drawn without replacement weighted by the
+        (speed-skew) participation probabilities, mirroring the host
+        simulator's `rng.choice(..., p=probs)`; drawn clients leave at
+        ``dropout_at`` and rejoin at ``rejoin_at`` (NEVER when omitted —
+        the Fig. 3 permanent-dropout scenario);
+      * neither — every client is always on."""
     root = jax.random.PRNGKey(seed)
     kg, kt, kd = (jax.random.fold_in(root, c) for c in (101, 102, 103))
     gumbels = jax.random.gumbel(kg, (n_events, n_clients), jnp.float32)
     tau_raw = jax.random.exponential(kt, (n_events,), jnp.float32) * beta
-    dropped = jnp.zeros((n_clients,), jnp.bool_)
+    if windows is not None:
+        leave, rejoin = windows
+        leave = jnp.asarray(np.asarray(leave), jnp.int32)
+        rejoin = jnp.asarray(np.asarray(rejoin), jnp.int32)
+        return StalenessRandomness(gumbels, tau_raw, leave, rejoin)
+    leave = jnp.full((n_clients,), NEVER, jnp.int32)
+    rejoin = jnp.full((n_clients,), NEVER, jnp.int32)
     k = int(dropout_frac * n_clients)
-    if k > 0:
+    if k > 0 and dropout_at is not None:
         probs = jnp.asarray(staleness_client_probs(n_clients, speed_skew))
         idx = jax.random.choice(kd, n_clients, (k,), replace=False, p=probs)
-        dropped = dropped.at[idx].set(True)
-    return StalenessRandomness(gumbels, tau_raw, dropped)
+        leave = leave.at[idx].set(dropout_at)
+        if rejoin_at is not None:
+            rejoin = rejoin.at[idx].set(rejoin_at)
+    return StalenessRandomness(gumbels, tau_raw, leave, rejoin)
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +148,47 @@ def ring_append(ring: jnp.ndarray, cursor, w, emit):
 
 
 # ---------------------------------------------------------------------------
+# In-scan eval cadence: snapshot buffer written on mark crossings.
+# ---------------------------------------------------------------------------
+
+def eval_marks_for(T: int, eval_every: Optional[int]) -> Optional[Tuple[int, ...]]:
+    """The server iterations the host simulator evaluates at
+    (``t % eval_every == 0 or t == T``), as a static sorted tuple."""
+    if not eval_every:
+        return None
+    return tuple(sorted(set(range(eval_every, T + 1, eval_every)) | {T}))
+
+
+def snapshot_update(snaps, hits, marks, t_new, emit, w):
+    """Write `w` into the snapshot row whose mark equals `t_new`, gated on
+    `emit` (t only lands on a mark via an emitted update; freeze fast-forward
+    jumps skip their marks exactly like the host's modulo cadence does).
+    Returns (snaps, hits)."""
+    hit = jnp.logical_and(emit, marks == t_new)          # (n_marks,) bool
+    snaps = jnp.where(hit[:, None], w[None, :], snaps)
+    return snaps, jnp.logical_or(hits, hit)
+
+
+def _apply_evals(snaps, hits, marks, eval_fn, unravel):
+    """Run the host `eval_fn` over the marks the scan actually reached."""
+    evals, eval_ts = [], []
+    hits = np.asarray(hits)
+    snaps = np.asarray(snaps)
+    for i, m in enumerate(marks):
+        if hits[i]:
+            evals.append(eval_fn(unravel(jnp.asarray(snaps[i]))))
+            eval_ts.append(int(m))
+    return evals, eval_ts
+
+
+def _select_tree(pred, new, old):
+    """Per-leaf ``where(pred, new, old)`` — gates aggregator state during
+    all-gone freezes so a thawed run continues from the frozen state exactly
+    like the host loop (which performs no transitions while frozen)."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), new, old)
+
+
+# ---------------------------------------------------------------------------
 
 def make_staleness_runner(*, grad_fn: Callable, params0,
                           aggregator: Aggregator, n_clients: int, T: int,
@@ -115,20 +196,27 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
                           server_lr: Optional[Callable] = None,
                           tau_max: Optional[int] = None,
                           speed_skew: float = 0.0,
-                          dropout_at: Optional[int] = None,
+                          eval_marks: Optional[Sequence[int]] = None,
                           local_steps: int = 1, local_lr: float = 0.05,
                           init_cache_grads: bool = True,
                           record_w: bool = False):
     """Build the jitted runner
-    ``run(key, gumbels, tau_raw, dropped, lr) -> (w, state, outs)``.
+    ``run(key, gumbels, tau_raw, leave_at, rejoin_at, lr)
+          -> (w, state, outs, extras)``.
 
     `lr` is a traced f32 scalar (constant server lr) so one compiled runner
     serves the whole lr-tuning grid; pass a callable `server_lr` to bake an
-    iteration schedule instead (the runtime `lr` is then ignored). `grad_fn`
-    must be trace-safe in `client`. The event count is the leading axis of
-    the ``gumbels``/``tau_raw`` inputs (see `build_staleness_randomness`).
-    vmap the runner over stacked ``(key, gumbels, tau_raw, dropped, lr)``
-    for seed/grid sweeps."""
+    iteration schedule instead (the runtime `lr` is then ignored).
+    ``leave_at``/``rejoin_at`` are traced (n,) int32 availability windows
+    (see `build_staleness_randomness`), so the same executable serves every
+    dropout fraction, trigger iteration and re-join scenario. `grad_fn` must
+    be trace-safe in `client`. The event count is the leading axis of the
+    ``gumbels``/``tau_raw`` inputs. With `eval_marks` (a static sorted tuple
+    of server iterations, see `eval_marks_for`), ``extras`` carries
+    ``snaps (n_marks, d)`` / ``hits (n_marks,)`` — the model at each reached
+    mark, for post-scan host evaluation. vmap the runner over stacked
+    ``(key, gumbels, tau_raw, leave_at, rejoin_at, lr)`` for seed/grid/
+    scenario sweeps."""
     n = n_clients
     flat0, unravel = ravel_pytree(params0)
     w0 = jnp.asarray(flat0, jnp.float32)
@@ -140,14 +228,18 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
     payload_fn = _payload_chain(grad_fn, unravel, local_steps, local_lr)
     log_probs = jnp.asarray(
         np.log(staleness_client_probs(n, speed_skew)), jnp.float32)
+    marks = (jnp.asarray(eval_marks, jnp.int32)
+             if eval_marks is not None else None)
     if server_lr is not None and not callable(server_lr):
         raise TypeError("pass constant lrs at call time; server_lr is for "
                         "iteration schedules (callable) only")
     lr_of_t = ((lambda t, lr: server_lr(t)) if server_lr is not None
                else (lambda t, lr: lr))
 
-    def _run(key, gumbels, tau_raw, dropped, lr):
+    def _run(key, gumbels, tau_raw, leave_at, rejoin_at, lr):
         lr = jnp.asarray(lr, jnp.float32)
+        leave_at = jnp.asarray(leave_at, jnp.int32)
+        rejoin_at = jnp.asarray(rejoin_at, jnp.int32)
         w = w0
         if wants_init:
             def init_step(key, client):
@@ -169,46 +261,67 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
 
         carry0 = {"w": w, "key": key, "state": state,
                   "t": jnp.asarray(t0, jnp.int32),
+                  # emitted-update count: tracks len(history)-1 in the host
+                  # deque; diverges from t after a freeze fast-forward jump
+                  "n_upd": jnp.asarray(t0, jnp.int32),
                   "ring": ring, "cursor": cursor}
+        if marks is not None:
+            carry0["snaps"] = jnp.zeros((marks.shape[0], d), jnp.float32)
+            carry0["hits"] = jnp.zeros((marks.shape[0],), jnp.bool_)
 
         def step(carry, ev):
             g_row, traw = ev
             t = carry["t"]
-            # dropout: traced-t trigger folded into the sampling logits
-            if dropout_at is not None:
-                gone = jnp.logical_and(dropped, t >= dropout_at)
-                logits = jnp.where(gone, -jnp.inf, log_probs)
-                # every client dropped: the host reference stops the run; the
-                # scan freezes instead (no emissions, model held) so the
-                # final w still matches
-                any_alive = jnp.any(~gone)
-            else:
-                logits = log_probs
-                any_alive = jnp.asarray(True)
+            # availability: traced-t windows folded into the sampling logits
+            gone = jnp.logical_and(leave_at <= t, t < rejoin_at)
+            logits = jnp.where(gone, -jnp.inf, log_probs)
+            # every client inside its window: no arrival is possible — the
+            # protocol freezes (no emission, model and aggregator state held)
+            # and t fast-forwards to the earliest rejoin; the host reference
+            # performs the same jump (or stops when none rejoins before T)
+            any_alive = jnp.any(~gone)
+            thaw_t = jnp.minimum(
+                jnp.min(jnp.where(gone, rejoin_at, NEVER)), T)
             j = jnp.argmax(logits + g_row).astype(jnp.int32)
             tau = jnp.minimum(jnp.floor(traw).astype(jnp.int32),
-                              jnp.minimum(tau_max, t))
+                              jnp.minimum(tau_max, carry["n_upd"]))
             w_stale = ring_read(carry["ring"], carry["cursor"], tau)
             payload, loss, key = payload_fn(w_stale, j, carry["key"])
             state, u, emit, lr_scale = agg.step(
                 carry["state"], Arrival(j, payload, t, tau))
             emit = jnp.logical_and(emit, jnp.logical_and(t < T, any_alive))
+            # frozen events perform no aggregator transition on the host
+            state = _select_tree(any_alive, state, carry["state"])
             eta = lr_of_t(t, lr) * lr_scale
             w = jnp.where(emit, carry["w"] - eta * u, carry["w"])
             ring, cursor = ring_append(carry["ring"], carry["cursor"], w, emit)
+            t_new = jnp.where(any_alive, t + emit.astype(jnp.int32), thaw_t)
             out = {"loss": loss, "emit": emit, "t": t,
                    "unorm": jnp.linalg.norm(u), "alive": any_alive}
             if record_w:
                 out["w"] = w
-            carry = {"w": w, "key": key, "state": state,
-                     "t": t + emit.astype(jnp.int32),
-                     "ring": ring, "cursor": cursor}
-            return carry, out
+            new_carry = {"w": w, "key": key, "state": state, "t": t_new,
+                         "n_upd": carry["n_upd"] + emit.astype(jnp.int32),
+                         "ring": ring, "cursor": cursor}
+            if marks is not None:
+                new_carry["snaps"], new_carry["hits"] = snapshot_update(
+                    carry["snaps"], carry["hits"], marks, t_new, emit, w)
+            return new_carry, out
 
         carry, outs = jax.lax.scan(step, carry0, (gumbels, tau_raw))
-        return carry["w"], carry["state"], outs
+        extras = {}
+        if marks is not None:
+            extras = {"snaps": carry["snaps"], "hits": carry["hits"]}
+        return carry["w"], carry["state"], outs, extras
 
     return jax.jit(_run)
+
+
+def _window_slack(n_clients: int, rejoin_at, windows) -> int:
+    """Extra events for freeze fast-forward jumps: each all-gone freeze burns
+    exactly one event and jumps to a strictly later rejoin, so at most
+    `n_clients` events are ever lost to freezes."""
+    return n_clients if (rejoin_at is not None or windows is not None) else 0
 
 
 def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
@@ -216,49 +329,79 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        tau_max: Optional[int] = None, speed_skew: float = 0.0,
                        dropout_frac: float = 0.0,
                        dropout_at: Optional[int] = None,
+                       rejoin_at: Optional[int] = None, windows=None,
+                       eval_fn: Optional[Callable] = None,
+                       eval_every: Optional[int] = None,
                        n_events: Optional[int] = None, local_steps: int = 1,
                        local_lr: float = 0.05, init_cache_grads: bool = True,
                        seed: int = 0, record_w: bool = False) -> ScanResult:
     """One device-resident run, trajectory-equivalent to
     ``StalenessSimulator(..., replay=build_staleness_randomness(seed, ...))``
-    given the same arguments."""
+    given the same arguments — including the eval cadence: with `eval_fn` and
+    `eval_every`, `ScanResult.evals`/`eval_ts` match `SimResult` exactly."""
     if n_events is None:
-        n_events = default_n_events(aggregator, T, init_cache_grads)
+        n_events = (default_n_events(aggregator, T, init_cache_grads)
+                    + _window_slack(n_clients, rejoin_at, windows))
     rand = build_staleness_randomness(seed, n_events, n_clients, beta,
-                                      dropout_frac, speed_skew)
+                                      dropout_frac, speed_skew,
+                                      dropout_at=dropout_at,
+                                      rejoin_at=rejoin_at, windows=windows)
+    marks = (eval_marks_for(T, eval_every or T)
+             if eval_fn is not None else None)
     runner = make_staleness_runner(
         grad_fn=grad_fn, params0=params0, aggregator=aggregator,
         n_clients=n_clients, T=T, beta=beta,
         server_lr=server_lr if callable(server_lr) else None,
-        tau_max=tau_max, speed_skew=speed_skew, dropout_at=dropout_at,
+        tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
         local_steps=local_steps, local_lr=local_lr,
         init_cache_grads=init_cache_grads, record_w=record_w)
     lr = jnp.float32(0.0 if callable(server_lr) else server_lr)
-    w, _, outs = runner(jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
-                        rand.dropped, lr)
+    w, _, outs, extras = runner(jax.random.PRNGKey(seed), rand.gumbels,
+                                rand.tau_raw, rand.leave_at, rand.rejoin_at,
+                                lr)
+    evals, eval_ts = [], []
+    if marks is not None:
+        unravel = ravel_pytree(params0)[1]
+        evals, eval_ts = _apply_evals(extras["snaps"], extras["hits"], marks,
+                                      eval_fn, unravel)
     wants_init = init_cache_grads and wants_cache_init(aggregator)
-    return _to_result(w, outs, T, n_clients if wants_init else 0)
+    return _to_result(w, outs, T, n_clients if wants_init else 0,
+                      evals=evals, eval_ts=eval_ts)
 
 
 def _staleness_batch(seeds: Sequence[int], *, n_events: int, n_clients: int,
-                     beta: float, dropout_frac: float, speed_skew: float):
+                     beta: float, dropout_frac: float, speed_skew: float,
+                     dropout_at: Optional[int] = None,
+                     rejoin_at: Optional[int] = None, windows=None):
     """Stack per-seed randomness and PRNG keys on host (pure precompute)."""
-    keys, gum, tau, drp = [], [], [], []
+    keys, gum, tau, leave, rejoin = [], [], [], [], []
     for s in seeds:
         r = build_staleness_randomness(s, n_events, n_clients, beta,
-                                       dropout_frac, speed_skew)
+                                       dropout_frac, speed_skew,
+                                       dropout_at=dropout_at,
+                                       rejoin_at=rejoin_at, windows=windows)
         keys.append(jax.random.PRNGKey(s))
         gum.append(r.gumbels)
         tau.append(r.tau_raw)
-        drp.append(r.dropped)
-    return (jnp.stack(keys), jnp.stack(gum), jnp.stack(tau), jnp.stack(drp))
+        leave.append(r.leave_at)
+        rejoin.append(r.rejoin_at)
+    return (jnp.stack(keys), jnp.stack(gum), jnp.stack(tau),
+            jnp.stack(leave), jnp.stack(rejoin))
 
 
-def _staleness_results(ws, outs, n_runs: int, T: int,
-                       n_init: int) -> List[ScanResult]:
+def _staleness_results(ws, outs, extras, n_runs: int, T: int, n_init: int,
+                       marks, eval_fn, unravel) -> List[ScanResult]:
     jax.block_until_ready(ws)
-    return [_to_result(ws[i], jax.tree.map(lambda o: o[i], outs), T, n_init)
-            for i in range(n_runs)]
+    results = []
+    for i in range(n_runs):
+        evals, eval_ts = [], []
+        if marks is not None and eval_fn is not None and "snaps" in extras:
+            evals, eval_ts = _apply_evals(extras["snaps"][i],
+                                          extras["hits"][i], marks,
+                                          eval_fn, unravel)
+        results.append(_to_result(ws[i], jax.tree.map(lambda o: o[i], outs),
+                                  T, n_init, evals=evals, eval_ts=eval_ts))
+    return results
 
 
 def run_staleness_seeds(*, grad_fn: Callable, params0,
@@ -267,32 +410,41 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
                         tau_max: Optional[int] = None, speed_skew: float = 0.0,
                         dropout_frac: float = 0.0,
                         dropout_at: Optional[int] = None,
+                        rejoin_at: Optional[int] = None, windows=None,
+                        eval_fn: Optional[Callable] = None,
+                        eval_every: Optional[int] = None,
                         n_events: Optional[int] = None, local_steps: int = 1,
                         local_lr: float = 0.05, init_cache_grads: bool = True,
                         runner=None) -> List[ScanResult]:
     """vmap one compiled runner over seeds — the whole batch of staleness
     trajectories is one XLA computation. Pass `runner` (a
-    `make_staleness_runner` result with matching statics) to reuse a compiled
+    `make_staleness_runner` result with matching statics, including
+    `eval_marks` when `eval_fn`/`eval_every` are given) to reuse a compiled
     runner across calls, e.g. across an lr grid."""
     if n_events is None:
-        n_events = default_n_events(aggregator, T, init_cache_grads)
+        n_events = (default_n_events(aggregator, T, init_cache_grads)
+                    + _window_slack(n_clients, rejoin_at, windows))
     batch = _staleness_batch(seeds, n_events=n_events, n_clients=n_clients,
                              beta=beta, dropout_frac=dropout_frac,
-                             speed_skew=speed_skew)
+                             speed_skew=speed_skew, dropout_at=dropout_at,
+                             rejoin_at=rejoin_at, windows=windows)
+    marks = (eval_marks_for(T, eval_every or T)
+             if eval_fn is not None else None)
     if runner is None:
         runner = make_staleness_runner(
             grad_fn=grad_fn, params0=params0, aggregator=aggregator,
             n_clients=n_clients, T=T, beta=beta,
             server_lr=server_lr if callable(server_lr) else None,
-            tau_max=tau_max, speed_skew=speed_skew, dropout_at=dropout_at,
+            tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
             init_cache_grads=init_cache_grads)
     lr = 0.0 if callable(server_lr) else float(server_lr)
     lrs = jnp.full((len(seeds),), lr, jnp.float32)
-    ws, _, outs = jax.vmap(runner)(*batch, lrs)
+    ws, _, outs, extras = jax.vmap(runner)(*batch, lrs)
     wants_init = init_cache_grads and wants_cache_init(aggregator)
-    return _staleness_results(ws, outs, len(seeds), T,
-                              n_clients if wants_init else 0)
+    return _staleness_results(ws, outs, extras, len(seeds), T,
+                              n_clients if wants_init else 0,
+                              marks, eval_fn, ravel_pytree(params0)[1])
 
 
 def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
@@ -301,6 +453,9 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        tau_max: Optional[int] = None, speed_skew: float = 0.0,
                        dropout_frac: float = 0.0,
                        dropout_at: Optional[int] = None,
+                       rejoin_at: Optional[int] = None, windows=None,
+                       eval_fn: Optional[Callable] = None,
+                       eval_every: Optional[int] = None,
                        n_events: Optional[int] = None, local_steps: int = 1,
                        local_lr: float = 0.05, init_cache_grads: bool = True,
                        runner=None) -> List[List[ScanResult]]:
@@ -309,10 +464,14 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
     step sizes — exactly the host grid in benchmarks/common.py `tuned`).
     Returns ``results[i_lr][i_seed]``."""
     if n_events is None:
-        n_events = default_n_events(aggregator, T, init_cache_grads)
-    keys, gum, tau, drp = _staleness_batch(
-        seeds, n_events=n_events, n_clients=n_clients, beta=beta,
-        dropout_frac=dropout_frac, speed_skew=speed_skew)
+        n_events = (default_n_events(aggregator, T, init_cache_grads)
+                    + _window_slack(n_clients, rejoin_at, windows))
+    batch = _staleness_batch(seeds, n_events=n_events, n_clients=n_clients,
+                             beta=beta, dropout_frac=dropout_frac,
+                             speed_skew=speed_skew, dropout_at=dropout_at,
+                             rejoin_at=rejoin_at, windows=windows)
+    marks = (eval_marks_for(T, eval_every or T)
+             if eval_fn is not None else None)
     L, ns = len(lrs), len(seeds)
     tile = lambda a: jnp.concatenate([a] * L, 0)
     lr_vec = jnp.repeat(jnp.asarray(lrs, jnp.float32), ns)
@@ -320,12 +479,13 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
         runner = make_staleness_runner(
             grad_fn=grad_fn, params0=params0, aggregator=aggregator,
             n_clients=n_clients, T=T, beta=beta,
-            tau_max=tau_max, speed_skew=speed_skew, dropout_at=dropout_at,
+            tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
             init_cache_grads=init_cache_grads)
-    ws, _, outs = jax.vmap(runner)(tile(keys), tile(gum), tile(tau),
-                                   tile(drp), lr_vec)
+    ws, _, outs, extras = jax.vmap(runner)(*tuple(tile(a) for a in batch),
+                                           lr_vec)
     wants_init = init_cache_grads and wants_cache_init(aggregator)
-    flat = _staleness_results(ws, outs, L * ns, T,
-                              n_clients if wants_init else 0)
+    flat = _staleness_results(ws, outs, extras, L * ns, T,
+                              n_clients if wants_init else 0,
+                              marks, eval_fn, ravel_pytree(params0)[1])
     return [flat[i * ns:(i + 1) * ns] for i in range(L)]

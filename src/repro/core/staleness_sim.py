@@ -25,6 +25,12 @@ from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
 from repro.core.simulator import SimResult
 
 
+#: sentinel iteration for "never": a client with ``leave_at == NEVER`` is
+#: always on; one with ``rejoin_at == NEVER`` never comes back. Shared with
+#: the scanned engine (repro/core/scan_staleness.py re-exports it).
+NEVER: int = int(np.iinfo(np.int32).max)
+
+
 def default_tau_max(beta: float) -> int:
     """History bound when none is given — shared by the host simulator and
     the scanned engine; covers essentially all Exp(β) draws
@@ -51,13 +57,23 @@ class StalenessSimulator:
                  local_steps: int = 1, local_lr: float = 0.05,
                  eval_fn: Optional[Callable] = None, eval_every: int = 50,
                  dropout_frac: float = 0.0, dropout_at: Optional[int] = None,
+                 rejoin_at: Optional[int] = None, windows=None,
                  init_cache_grads: bool = True, seed: int = 0, replay=None):
         """`replay` (duck-typed `StalenessRandomness`: .gumbels (E, n),
-        .tau_raw (E,), .dropped (n,)) switches the protocol's random draws
-        from this instance's numpy RNG to a pre-materialised stream — the one
-        the scanned engine consumes — so host and device trajectories can be
-        compared event-for-event. Model/payload RNG (the jax key chain) is
-        unaffected. The run stops early if the replay stream is exhausted."""
+        .tau_raw (E,), .leave_at (n,), .rejoin_at (n,)) switches the
+        protocol's random draws from this instance's numpy RNG to a
+        pre-materialised stream — the one the scanned engine consumes — so
+        host and device trajectories can be compared event-for-event.
+        Model/payload RNG (the jax key chain) is unaffected. The run stops
+        early if the replay stream is exhausted.
+
+        Availability: `windows = (leave_at, rejoin_at)` gives explicit (n,)
+        per-client availability windows (client i is unavailable while
+        ``leave_at[i] <= t < rejoin_at[i]``). Without it, the legacy
+        `dropout_frac`/`dropout_at` trigger draws the leaving set from
+        `self.rng` once when t first reaches `dropout_at` (plus optional
+        scalar `rejoin_at` for a leave/re-join scenario); permanent dropout
+        is the `rejoin_at=None` special case."""
         self.grad_fn = grad_fn
         flat, self.unravel = ravel_pytree(params0)
         self.w = np.asarray(flat, np.float32)
@@ -73,6 +89,8 @@ class StalenessSimulator:
         self.eval_every = eval_every
         self.dropout_frac = dropout_frac
         self.dropout_at = dropout_at
+        self.rejoin_at = rejoin_at
+        self.windows = windows
         self.init_cache_grads = init_cache_grads
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
@@ -114,40 +132,67 @@ class StalenessSimulator:
             history.append(self.w.copy())
             t = 1
 
-        dropped: set = set()
         res = SimResult([], [], [], [], 0, [])
-        probs = self.client_probs.copy()
         replay = self.replay
         if replay is not None:                  # hoist device->host transfers
             r_gumbels = np.asarray(replay.gumbels, np.float32)
             r_tau_raw = np.asarray(replay.tau_raw, np.float32)
-            r_dropped = np.asarray(replay.dropped)
             n_replay = r_tau_raw.shape[0]
+        # availability windows: client i is unavailable while
+        # leave_at[i] <= t < rejoin_at[i]
+        if self.windows is not None:
+            leave_at = np.asarray(self.windows[0], np.int64).copy()
+            rejoin_at = np.asarray(self.windows[1], np.int64).copy()
+        elif replay is not None:
+            leave_at = np.asarray(replay.leave_at, np.int64)
+            rejoin_at = np.asarray(replay.rejoin_at, np.int64)
+        else:
+            leave_at = np.full(n, NEVER, np.int64)
+            rejoin_at = np.full(n, NEVER, np.int64)
+        # legacy dropout trigger: one-shot (disarmed after it fires, whatever
+        # k resolves to — re-entering every iteration would re-draw from
+        # self.rng and silently diverge the stream from a dropout_frac=0 run)
+        armed = (self.windows is None and replay is None
+                 and self.dropout_at is not None and self.dropout_frac > 0)
         e = 0                                   # replay event cursor
         while t < T:
             if replay is not None and e >= n_replay:
                 break                           # replay stream exhausted
-            if (self.dropout_at is not None and t >= self.dropout_at
-                    and self.dropout_frac > 0 and not dropped):
+            if armed and t >= self.dropout_at:
+                armed = False
                 k = int(self.dropout_frac * n)
+                if k > 0:
+                    idx = self.rng.choice(n, size=k, replace=False,
+                                          p=self.client_probs)
+                    leave_at[idx] = self.dropout_at
+                    rejoin_at[idx] = (self.rejoin_at
+                                      if self.rejoin_at is not None else NEVER)
+            gone = (leave_at <= t) & (t < rejoin_at)
+            if gone.all():
+                # no client available: no arrival can happen at iteration t —
+                # fast-forward to the earliest rejoin (exit if none before T).
+                # The scan burns exactly one event for this jump; mirror its
+                # randomness use so the streams stay aligned through the thaw.
                 if replay is not None:
-                    dropped = set(np.flatnonzero(r_dropped).tolist())
-                else:
-                    dropped = set(self.rng.choice(n, size=k, replace=False,
-                                                  p=probs).tolist())
-                alive = np.array([p if i not in dropped else 0.0
-                                  for i, p in enumerate(self.client_probs)])
-                if alive.sum() == 0:
-                    break
-                probs = alive / alive.sum()
+                    tau = min(int(r_tau_raw[e]), self.tau_max,
+                              len(history) - 1)
+                    self._payload(history[-(tau + 1)], 0)  # key-chain parity
+                e += 1
+                t = int(min(rejoin_at.min(), T))
+                continue
             if replay is not None:
                 # identical f32 arithmetic to the scanned engine: unnormalised
                 # log-probs masked to -inf, argmax over logits + Gumbel row
-                logits = np.where(probs > 0, self._log_probs,
-                                  -np.inf).astype(np.float32)
+                logits = np.where(gone, -np.inf,
+                                  self._log_probs).astype(np.float32)
                 j = int(np.argmax(logits + r_gumbels[e]))
                 tau = min(int(r_tau_raw[e]), self.tau_max, len(history) - 1)
             else:
+                if gone.any():
+                    alive = np.where(gone, 0.0, self.client_probs)
+                    probs = alive / alive.sum()
+                else:      # bit-identical to the pre-windows draw
+                    probs = self.client_probs
                 j = int(self.rng.choice(n, p=probs))
                 tau = min(int(self.rng.exponential(self.beta)),
                           self.tau_max, len(history) - 1)

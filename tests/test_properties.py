@@ -78,6 +78,45 @@ def test_ring_buffer_reads_equal_deque_semantics(tau_max, steps):
         ring, cursor = ring_append(ring, cursor, w, jnp.asarray(emit))
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 7), st.integers(5, 40),
+       st.lists(st.tuples(st.booleans(), st.integers(0, 6)),
+                min_size=1, max_size=60))
+def test_snapshot_marks_match_host_cadence(every, T, steps):
+    """The in-scan eval snapshot (repro/core/scan_staleness.py
+    snapshot_update) must capture the model exactly at the host's
+    ``t % eval_every == 0 or t == T`` marks under a *gated* t: t advances
+    only on emitted updates, and freeze fast-forward jumps skip their marks
+    (no update lands on them) — matching the host, whose jump performs no
+    eval either."""
+    import jax
+    from repro.core.scan_staleness import eval_marks_for, snapshot_update
+
+    marks_t = eval_marks_for(T, every)
+    marks = jnp.asarray(marks_t, jnp.int32)
+    snaps = jnp.zeros((len(marks_t), 2), jnp.float32)
+    hits = jnp.zeros((len(marks_t),), jnp.bool_)
+    t, ref = 0, {}
+    for emit, jump in steps:
+        if jump and not emit:               # freeze fast-forward: no update
+            t_new, emitted = min(t + jump, T), False
+        else:
+            t_new, emitted = t + int(emit), bool(emit)
+        w = jnp.full((2,), float(t_new), jnp.float32)
+        snaps, hits = snapshot_update(snaps, hits, marks,
+                                      jnp.asarray(t_new, jnp.int32),
+                                      jnp.asarray(emitted), w)
+        if emitted and t_new in marks_t:
+            ref[t_new] = float(t_new)       # host evals right after t += 1
+        t = t_new
+        if t >= T:
+            break
+    for i, m in enumerate(marks_t):
+        assert bool(hits[i]) == (m in ref)
+        if m in ref:
+            assert float(snaps[i][0]) == ref[m]
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 8), st.integers(8, 128), st.integers(0, 10**6))
 def test_cache_update_invariant(n, d, seed):

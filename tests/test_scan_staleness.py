@@ -1,7 +1,8 @@
 """Scanned-staleness engine: trajectory equivalence against the host
 `StalenessSimulator` under seed-matched RNG replay (all five algorithms,
-with/without dropout, speed-skew, both τ-cap regimes), ring-buffer vs deque
-semantics, and the seed/lr-grid vmap paths."""
+with/without dropout, leave/re-join availability windows, speed-skew, both
+τ-cap regimes, in-scan eval cadence), ring-buffer vs deque semantics, and
+the seed/lr-grid vmap paths."""
 from collections import deque
 
 import jax
@@ -12,9 +13,10 @@ import pytest
 from repro.core.aggregators import (ACED, ACEIncremental, CA2FL, FedBuff,
                                     VanillaASGD)
 from repro.core.scan_engine import default_n_events
-from repro.core.scan_staleness import (build_staleness_randomness,
-                                       make_staleness_runner, ring_append,
-                                       ring_read, run_staleness_grid,
+from repro.core.scan_staleness import (NEVER, build_staleness_randomness,
+                                       eval_marks_for, make_staleness_runner,
+                                       ring_append, ring_read,
+                                       run_staleness_grid,
                                        run_staleness_scan,
                                        run_staleness_seeds)
 from repro.core.staleness_sim import StalenessSimulator
@@ -39,25 +41,36 @@ AGGS = {
 }
 
 
+def _quad_eval_fn(params):
+    return {"dist": float(jnp.sqrt(jnp.sum(params ** 2)))}
+
+
 def _host_and_scan(algo, *, n=8, d=6, T=40, beta=2.0, seed=0, tau_max=None,
                    speed_skew=0.0, dropout_frac=0.0, dropout_at=None,
+                   rejoin_at=None, windows=None, eval_every=None,
                    server_lr=0.05):
     """Run host (replay mode) and scan on the same random stream."""
     grad_fn = quad_grad_fn(n, d)
     n_events = default_n_events(AGGS[algo](), T)
+    if rejoin_at is not None or windows is not None:
+        n_events += n                       # freeze fast-forward slack
     rand = build_staleness_randomness(seed, n_events, n, beta, dropout_frac,
-                                      speed_skew)
+                                      speed_skew, dropout_at=dropout_at,
+                                      rejoin_at=rejoin_at, windows=windows)
+    eval_fn = _quad_eval_fn if eval_every else None
     sim = StalenessSimulator(
         grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=AGGS[algo](),
         n_clients=n, server_lr=server_lr, beta=beta, tau_max=tau_max,
         speed_skew=speed_skew, dropout_frac=dropout_frac,
-        dropout_at=dropout_at, seed=seed, replay=rand)
+        dropout_at=dropout_at, rejoin_at=rejoin_at, windows=windows,
+        eval_fn=eval_fn, eval_every=eval_every or T, seed=seed, replay=rand)
     hr = sim.run(T)
     sr = run_staleness_scan(
         grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=AGGS[algo](),
         n_clients=n, server_lr=server_lr, T=T, beta=beta, tau_max=tau_max,
         speed_skew=speed_skew, dropout_frac=dropout_frac,
-        dropout_at=dropout_at, seed=seed)
+        dropout_at=dropout_at, rejoin_at=rejoin_at, windows=windows,
+        eval_fn=eval_fn, eval_every=eval_every, seed=seed)
     return sim, hr, sr
 
 
@@ -69,6 +82,11 @@ def _assert_equivalent(sim, hr, sr):
                                rtol=1e-4, atol=1e-5)
     assert sr.ts.tolist() == hr.ts
     assert sr.total_comms == hr.total_comms
+    assert sr.eval_ts == hr.eval_ts
+    for se, he in zip(sr.evals, hr.evals):
+        assert set(se) == set(he)
+        for k in se:
+            np.testing.assert_allclose(se[k], he[k], rtol=1e-4, atol=1e-5)
 
 
 @pytest.mark.parametrize("algo", sorted(AGGS))
@@ -126,13 +144,13 @@ def test_staleness_dropout_shrinks_participation():
     n, d, T = 10, 5, 80
     grad_fn = quad_grad_fn(n, d)
     n_events = default_n_events(VanillaASGD(), T)
-    rand = build_staleness_randomness(3, n_events, n, 2.0, 0.5, 0.0)
+    rand = build_staleness_randomness(3, n_events, n, 2.0, 0.5, 0.0,
+                                      dropout_at=T // 2)
     runner = make_staleness_runner(
         grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=VanillaASGD(),
-        n_clients=n, T=T, beta=2.0, dropout_at=T // 2,
-        record_w=True)
-    w, _, outs = runner(jax.random.PRNGKey(3), rand.gumbels, rand.tau_raw,
-                        rand.dropped, jnp.float32(0.05))
+        n_clients=n, T=T, beta=2.0, record_w=True)
+    w, _, outs, _ = runner(jax.random.PRNGKey(3), rand.gumbels, rand.tau_raw,
+                           rand.leave_at, rand.rejoin_at, jnp.float32(0.05))
     # recover arrivals from the logits the scan used
     dropped = np.asarray(rand.dropped)
     logp = np.log(np.full(n, 1.0 / n)).astype(np.float32)
@@ -141,6 +159,95 @@ def test_staleness_dropout_shrinks_participation():
     late = ts >= T // 2
     arrive_late = np.argmax(np.where(dropped, -np.inf, logp) + g[late], axis=1)
     assert not set(arrive_late.tolist()) & set(np.flatnonzero(dropped))
+
+
+# ---------------------------------------------------------------------------
+# Availability windows (leave / re-join) and the in-scan eval cadence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", sorted(AGGS))
+def test_staleness_scan_matches_host_with_windows(algo):
+    """Staggered per-client leave/re-join windows (a mid-run absence, a late
+    joiner, a permanent dropout) for every algorithm."""
+    n, T = 10, 60
+    leave = np.full(n, NEVER, np.int64)
+    rejoin = np.full(n, NEVER, np.int64)
+    leave[2], rejoin[2] = 10, 30           # mid-run absence
+    leave[5], rejoin[5] = 0, 20            # late joiner
+    leave[7] = 25                          # permanent dropout
+    sim, hr, sr = _host_and_scan(algo, n=n, T=T, windows=(leave, rejoin))
+    _assert_equivalent(sim, hr, sr)
+
+
+@pytest.mark.parametrize("algo", sorted(AGGS))
+def test_staleness_scan_freeze_thaw_all_left(algo):
+    """Every client inside its window at once: the run freezes (model and
+    aggregator state held), fast-forwards to the earliest rejoin, and resumes
+    — event-for-event matched to the host jump."""
+    n, T = 8, 50
+    leave = np.full(n, 12, np.int64)
+    rejoin = np.full(n, 22, np.int64)
+    rejoin[3] = 30                          # one client stays away longer
+    sim, hr, sr = _host_and_scan(algo, n=n, T=T, windows=(leave, rejoin),
+                                 eval_every=10)
+    _assert_equivalent(sim, hr, sr)
+    # no server iterations happen inside the frozen gap
+    assert not [t for t in hr.ts if 12 < t < 22]
+    if hr.ts:                               # the run resumes after the thaw
+        assert max(hr.ts) >= 22
+
+
+def test_staleness_scan_legacy_rejoin_scalar():
+    """dropout_frac/dropout_at + scalar rejoin_at: the drawn set leaves and
+    comes back — the fig3 re-join scenario."""
+    sim, hr, sr = _host_and_scan("aced", n=10, T=60, dropout_frac=0.5,
+                                 dropout_at=20, rejoin_at=40, eval_every=15)
+    _assert_equivalent(sim, hr, sr)
+
+
+@pytest.mark.parametrize("algo", ["asgd", "fedbuff", "aced"])
+def test_staleness_scan_eval_cadence_matches_host(algo):
+    """In-scan snapshots evaluated post-scan == host SimResult.evals at the
+    identical cadence (incl. the t == T mark)."""
+    sim, hr, sr = _host_and_scan(algo, T=40, eval_every=7)
+    _assert_equivalent(sim, hr, sr)
+    assert sr.eval_ts == [7, 14, 21, 28, 35, 40]
+    assert len(sr.evals) == 6
+    assert sr.final_eval() == sr.evals[-1]
+
+
+def test_eval_marks_for_cadence():
+    assert eval_marks_for(40, 7) == (7, 14, 21, 28, 35, 40)
+    assert eval_marks_for(40, 10) == (10, 20, 30, 40)
+    assert eval_marks_for(5, 100) == (5,)
+    assert eval_marks_for(40, None) is None
+
+
+def test_aced_event_budget_survives_heavy_dropout():
+    """Regression for the fig3 50%-dropout ACED cell: ACED's emission is
+    guaranteed (the arriving client re-enters the active set before the
+    any()), so the default budget must reach T exactly — _to_result raises
+    RuntimeError if a scan's budget ever starves while clients remain, so
+    this test fails the moment that guarantee breaks."""
+    T = 60
+    sim, hr, sr = _host_and_scan("aced", n=10, T=T, dropout_frac=0.5,
+                                 dropout_at=T // 2)
+    _assert_equivalent(sim, hr, sr)
+    assert sr.ts[-1] == T - 1               # full trajectory, no starvation
+
+
+def test_default_n_events_headroom_for_non_guaranteed_emitters():
+    """ACED's emission is guaranteed (documented in aggregators.py), so it
+    gets no headroom; the budget mechanism serves rules that declare
+    guaranteed_emit = False."""
+    assert ACED(tau_algo=5).guaranteed_emit
+    assert (default_n_events(ACED(tau_algo=5), 40)
+            == default_n_events(ACEIncremental(), 40))
+
+    class Flaky(VanillaASGD):
+        guaranteed_emit = False
+
+    assert default_n_events(Flaky(), 40) > default_n_events(VanillaASGD(), 40)
 
 
 # ---------------------------------------------------------------------------

@@ -70,6 +70,53 @@ def test_dropout_reduces_participation():
     assert len(r.losses) == T - 1
 
 
+def test_dropout_trigger_fires_once_and_guards_empty_draw():
+    """Regression: with 0 < dropout_frac < 1/n the drawn set is empty (k=0),
+    and the old trigger re-entered (re-drawing from self.rng) every remaining
+    iteration — silently diverging the RNG stream from a dropout_frac=0 run.
+    The trigger must disarm after its first firing and skip the k == 0 draw,
+    leaving the stream (and therefore the trajectory) untouched."""
+    n, d, T = 8, 5, 40
+    grad_fn, _ = quad_grad_fn(n, d)
+
+    def run(**kw):
+        sim = StalenessSimulator(grad_fn=grad_fn, params0=jnp.zeros(d),
+                                 aggregator=VanillaASGD(), n_clients=n,
+                                 server_lr=0.05, beta=2.0, seed=5, **kw)
+        sim.run(T)
+        return np.asarray(sim.w)
+
+    w_plain = run()
+    w_k0 = run(dropout_frac=0.05, dropout_at=10)   # k = int(0.05*8) == 0
+    np.testing.assert_array_equal(w_plain, w_k0)
+
+
+def test_host_windows_leave_and_rejoin():
+    """Host-only (non-replay) windows: a client inside its window never
+    arrives; it participates again after rejoin."""
+    n, d, T = 6, 5, 50
+    grad_fn, _ = quad_grad_fn(n, d)
+    leave = np.full(n, np.iinfo(np.int32).max, np.int64)
+    rejoin = np.full(n, np.iinfo(np.int32).max, np.int64)
+    leave[0], rejoin[0] = 5, 30
+    arrivals = []
+    orig = quad_grad_fn(n, d)[0]
+
+    def spy_grad_fn(params, client, key):
+        arrivals.append(int(client))
+        return orig(params, client, key)
+
+    sim = StalenessSimulator(grad_fn=spy_grad_fn, params0=jnp.zeros(d),
+                             aggregator=VanillaASGD(), n_clients=n,
+                             server_lr=0.05, beta=2.0, seed=3,
+                             windows=(leave, rejoin))
+    r = sim.run(T)
+    assert len(r.losses) == T
+    gone_arrivals = [j for t, j in zip(r.ts, arrivals) if 5 <= t < 30]
+    assert 0 not in gone_arrivals
+    assert 0 in arrivals                    # participates outside the window
+
+
 def test_sim_deterministic_given_seed():
     n, d, T = 6, 5, 25
     grad_fn, _ = quad_grad_fn(n, d)

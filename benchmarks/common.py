@@ -11,6 +11,13 @@ Runs execute on the device-resident scanned-staleness engine
 (task, algorithm, protocol) — cached across calls — vmapped over seeds, and
 in `tuned` over the whole lr grid at once. Pass ``engine="host"`` to fall
 back to the reference `StalenessSimulator` loop.
+
+When more than one device is visible (e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, or a real TPU pod
+slice) the scan path automatically picks the **sharded** runner
+(repro/core/scan_sharded.py): per-client caches shard over ``data``,
+features over ``model``. Pass ``mesh=None`` to force single-device, or an
+explicit Mesh to control the layout.
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
                                     DelayAdaptiveASGD, FedBuff, VanillaASGD)
+from repro.core.scan_sharded import (make_sharded_staleness_runner,
+                                     staleness_mesh)
 from repro.core.scan_staleness import (eval_marks_for, make_staleness_runner,
                                        run_staleness_grid,
                                        run_staleness_seeds)
@@ -64,17 +73,29 @@ def clear_runner_cache() -> None:
     _RUNNER_CACHE.clear()
 
 
+def _resolve_mesh(mesh):
+    """mesh="auto" -> a (data, model) mesh over all devices (None on a single
+    device); None / an explicit Mesh pass through. A fresh Mesh per call is
+    fine: the runner cache below keys on the mesh *shape*, not identity."""
+    return staleness_mesh() if mesh == "auto" else mesh
+
+
 def _scan_runner(task, agg, *, T, beta, speed_skew=0.0, local_steps=1,
-                 local_lr=0.05, eval_marks=None):
+                 local_lr=0.05, eval_marks=None, mesh="auto"):
+    mesh = _resolve_mesh(mesh)
     # the key carries every static baked into the compiled runner
     key = (id(task), repr(agg), T, default_tau_max(beta), speed_skew,
-           local_steps, local_lr, eval_marks)
+           local_steps, local_lr, eval_marks,
+           None if mesh is None else tuple(sorted(mesh.shape.items())))
     if key not in _RUNNER_CACHE:
-        _RUNNER_CACHE[key] = (task, make_staleness_runner(
+        kw = dict(
             grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
             n_clients=task.n_clients, T=T, beta=beta, speed_skew=speed_skew,
             local_steps=local_steps, local_lr=local_lr,
-            eval_marks=eval_marks))
+            eval_marks=eval_marks)
+        runner = (make_staleness_runner(**kw) if mesh is None
+                  else make_sharded_staleness_runner(mesh=mesh, **kw))
+        _RUNNER_CACHE[key] = (task, runner)
     return _RUNNER_CACHE[key][1]
 
 
@@ -133,11 +154,13 @@ def _summarize(task, results, wall: float, T: Optional[int] = None) -> Dict:
 def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
              seeds=(1,), dropout_frac=0.0, dropout_at=None, rejoin_at=None,
              windows=None, speed_skew=0.0, eval_every=None,
-             local_steps=1, local_lr=0.05, engine="scan") -> Dict:
+             local_steps=1, local_lr=0.05, engine="scan",
+             mesh="auto") -> Dict:
     """With `eval_every`, the row carries the accuracy *trajectory*
     ("eval_ts"/"eval_accs") — device-resident on the scan path via the
     in-scan snapshot cadence. `rejoin_at`/`windows` run leave/re-join
-    availability scenarios (TimelyFL-style) on either engine."""
+    availability scenarios (TimelyFL-style) on either engine. `mesh="auto"`
+    shards the scan whenever >1 device is visible (scan_sharded.py)."""
     if engine == "host":
         return _run_algo_host(task, agg_factory, T=T, beta=beta, lr=lr,
                               seeds=seeds, dropout_frac=dropout_frac,
@@ -148,7 +171,7 @@ def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
     marks = eval_marks_for(T, eval_every)
     runner = _scan_runner(task, agg, T=T, beta=beta, speed_skew=speed_skew,
                           local_steps=local_steps, local_lr=local_lr,
-                          eval_marks=marks)
+                          eval_marks=marks, mesh=mesh)
     t0 = time.time()
     results = run_staleness_seeds(
         grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
@@ -189,9 +212,11 @@ def _run_algo_host(task, agg_factory, *, T, beta, lr, seeds, dropout_frac,
 
 
 def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
-          protocol="comms", T_iter=None, engine="scan", **kw) -> Dict:
+          protocol="comms", T_iter=None, engine="scan", mesh="auto",
+          **kw) -> Dict:
     """Tune c over the grid, report the best final metric. On the scan engine
-    the whole grid × seed batch runs as one vmapped XLA computation."""
+    the whole grid × seed batch runs as one vmapped XLA computation —
+    sharded over the (data, model) mesh when >1 device is visible."""
     T = (comm_budget // M) if protocol == "comms" else (T_iter or comm_budget)
     lrs = [float(c * np.sqrt(n / T)) for c in c_grid]
     if engine == "scan":
@@ -199,7 +224,7 @@ def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
         marks = eval_marks_for(T, kw.get("eval_every"))
         runner = _scan_runner(task, agg, T=T, beta=beta,
                               speed_skew=kw.get("speed_skew", 0.0),
-                              eval_marks=marks)
+                              eval_marks=marks, mesh=mesh)
         t0 = time.time()
         grid = run_staleness_grid(
             grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,

@@ -32,6 +32,8 @@ from repro.core.delays import ExponentialDelays, build_schedule
 from repro.core.fl_tasks import make_vision_task
 from repro.core.scan_engine import (default_n_events, make_scan_runner,
                                     run_scan_seeds)
+from repro.core.scan_sharded import (make_sharded_staleness_runner,
+                                     staleness_mesh)
 from repro.core.scan_staleness import (build_staleness_randomness,
                                        make_staleness_runner)
 from repro.core.simulator import AFLSimulator
@@ -164,6 +166,35 @@ def _staleness_rows(fast=True):
                  "compile_s": compile_s, "speedup_vs_host": speedup,
                  "max_dev": dev,
                  "derived": f"speedup={speedup:.1f}x_vs_host"})
+
+    # --- sharded scan: same trajectory over a (data, model) mesh ----------
+    # only when >1 device is visible (forced host mesh in CI, pod on TPU);
+    # max_dev vs the single-device scan is the free differential check
+    mesh = staleness_mesh()
+    if mesh is not None:
+        srunner = make_sharded_staleness_runner(
+            mesh=mesh, grad_fn=task.grad_fn, params0=task.params0,
+            aggregator=ACEIncremental(), n_clients=n, T=T, beta=beta)
+        t0 = time.time()
+        jax.block_until_ready(srunner(*args))
+        scompile_s = time.time() - t0
+        t0 = time.time()
+        ws, _, _, _ = srunner(*args)
+        jax.block_until_ready(ws)
+        sscan_s = time.time() - t0
+        sdev = float(np.max(np.abs(np.asarray(ws) - np.asarray(w))))
+        rows.append({"bench": "scan_bench", "algo": "staleness_scan_sharded",
+                     "us_per_iter": sscan_s / host_iters * 1e6,
+                     "wall_s": sscan_s, "compile_s": scompile_s,
+                     "devices": int(mesh.devices.size),
+                     "mesh": dict(mesh.shape),
+                     "max_dev_vs_scan": sdev,
+                     "derived": (f"devices={mesh.devices.size}_"
+                                 f"dev={sdev:.1e}")})
+        if sdev > 1e-5:
+            raise AssertionError(
+                f"sharded staleness scan deviates from single-device scan: "
+                f"{sdev:.2e} > 1e-5")
     return rows
 
 

@@ -1,16 +1,20 @@
 """Paper Table a.3: server/client storage overheads per algorithm — measured
-bytes of actual aggregator state + the analytic accounting used at pod scale."""
+bytes of actual aggregator state vs the analytic accounting used at pod
+scale. The two must now agree byte-for-byte (afl_state_bytes is exact per
+layout); any drift raises, which `benchmarks/run.py --strict` turns into a
+CI failure."""
 from __future__ import annotations
 
 import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AFLConfig
 from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
                                     DelayAdaptiveASGD, FedBuff, VanillaASGD)
-from repro.core.distributed import afl_state_bytes
+from repro.core.distributed import afl_state_bytes, init_afl_state
 
 
 def main(fast=True):
@@ -20,6 +24,8 @@ def main(fast=True):
              ("delay_asgd", DelayAdaptiveASGD(), "delay_asgd"),
              ("fedbuff", FedBuff(buffer_size=10), "fedbuff"),
              ("ca2fl", CA2FL(buffer_size=10), "ca2fl"),
+             ("ca2fl_int8", CA2FL(buffer_size=10, cache_dtype="int8"),
+              "ca2fl"),
              ("ace_fp32", ACEIncremental(), "ace"),
              ("ace_int8", ACEIncremental(cache_dtype="int8"), "ace"),
              ("aced_int8", ACED(cache_dtype="int8"), "aced")]
@@ -30,9 +36,19 @@ def main(fast=True):
         cfg = AFLConfig(algorithm=algo_key, n_clients=n,
                         cache_dtype=getattr(agg, "cache_dtype", "float32"))
         analytic = afl_state_bytes(cfg, params)
+        tree_measured = sum(np.asarray(x).nbytes
+                            for x in jax.tree.leaves(init_afl_state(cfg,
+                                                                    params)))
+        tree_analytic = afl_state_bytes(cfg, params, layout="tree")
+        if analytic != measured or tree_analytic != tree_measured:
+            raise AssertionError(
+                f"{name}: analytic accounting drifted from allocation "
+                f"(flat {analytic} vs {measured}, "
+                f"tree {tree_analytic} vs {tree_measured})")
         rows.append({"bench": "table_a3_memory", "algo": name,
                      "measured_bytes": int(measured),
                      "analytic_bytes": int(analytic),
+                     "tree_bytes": int(tree_measured),
                      "bytes_per_param": round(measured / d, 3)})
     return rows
 

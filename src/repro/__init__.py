@@ -1,0 +1,16 @@
+"""repro — asynchronous-FL paper reproduction (JAX / Pallas).
+
+One process-wide config commitment lives here: **partitionable threefry**.
+The device-resident scan engines draw client gradient noise *inside* traced
+computations; with the legacy (non-partitionable) threefry lowering, a
+sharding constraint that propagates back into a `jax.random.normal` changes
+the generated values, so a sharded run (repro/core/scan_sharded.py) would
+silently diverge from the single-device scan and the host simulators it must
+match ≤1e-5. Partitionable threefry makes random values independent of the
+sharding layout (and is JAX's forward default). It must be set before any
+trace, and identically for every path being compared — hence at package
+import, not inside the sharded runner.
+"""
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)

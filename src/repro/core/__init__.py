@@ -10,6 +10,8 @@ from repro.core.delays import (ExponentialDelays, Schedule, arrival_schedule,
                                build_schedule)
 from repro.core.scan_engine import (ScanResult, make_scan_runner, run_scan,
                                     run_scan_seeds, sweep)
+from repro.core.scan_sharded import (make_sharded_staleness_runner,
+                                     staleness_mesh)
 from repro.core.scan_staleness import (NEVER, StalenessRandomness,
                                        build_staleness_randomness,
                                        eval_marks_for,

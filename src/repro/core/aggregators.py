@@ -21,9 +21,15 @@ sync per arrival). `on_arrival` remains as the host-side wrapper used by the
 event-driven simulators: it materialises `emit` and returns `None` when no
 update is emitted, preserving the original protocol.
 
-All operate on flat (d,) payload vectors against a `FlatCache`; the pjit
-distributed path (repro/core/distributed.py) reuses the same rules over
-pytree caches. The server applies ``w ← w − η · lr_scale · update``.
+Every rule is **layout-generic**: payloads and state vectors may be flat (d,)
+arrays (host simulators, scan engines — caches are `FlatCache`) or gradient
+pytrees (the pjit distributed path — caches are tree caches); cache access
+routes through the `cache_row`/`cache_set_row`/`cache_mean` dispatchers in
+repro/core/cache.py and everything else is per-leaf `jax.tree.map` (a bare
+array is its own single leaf). `distributed.apply_server_rule` is a thin
+adapter over this same `step` protocol, so host sim, single-device scan,
+sharded scan and pod-scale pjit all run ONE rule implementation.
+The server applies ``w ← w − η · lr_scale · update``.
 """
 from __future__ import annotations
 
@@ -33,14 +39,15 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cache import FlatCache, init_flat_cache
+from repro.core.cache import (FlatCache, cache_mean, cache_n, cache_row,
+                              cache_set_row, init_flat_cache)
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
 
 
 class Arrival(NamedTuple):
     client: int
-    payload: jnp.ndarray        # gradient-like descent direction (d,)
+    payload: Any                # gradient-like descent direction: (d,) or pytree
     t: int                      # server iteration counter
     staleness: int              # server iterations since client got its model
 
@@ -50,10 +57,26 @@ _ONE = jnp.ones((), jnp.float32)
 
 
 def wants_cache_init(agg) -> bool:
-    """Cache-based rules (ACE/ACED variants) are seeded with one gradient per
-    client before the loop (paper Alg. 1 line 1) — the single predicate every
-    simulator/engine must agree on."""
-    return hasattr(agg, "cache_dtype")
+    """Rules seeded with one gradient per client before the loop (paper
+    Alg. 1 line 1) declare ``cache_init = True`` — the single predicate every
+    simulator/engine must agree on. Explicit (not sniffed off `cache_dtype`):
+    CA²FL keeps a per-client cache dtype too, but its calibration state h_i⁰
+    starts at zero (paper Alg. a.3), not at an init gradient."""
+    return bool(getattr(agg, "cache_init", False))
+
+
+def _acc(a, x):
+    """``a + x`` per leaf, accumulating in f32 but preserving the state leaf's
+    dtype (the distributed path keeps accumulators in cfg.state_dtype; the
+    flat engines' f32 state makes the casts identities)."""
+    return jax.tree.map(
+        lambda a_, x_: (a_.astype(jnp.float32)
+                        + x_.astype(jnp.float32)).astype(a_.dtype), a, x)
+
+
+def _gate(emit, new, old):
+    """Per-leaf ``where(emit, new, old)``."""
+    return jax.tree.map(lambda n_, o_: jnp.where(emit, n_, o_), new, old)
 
 
 class Aggregator:
@@ -127,42 +150,54 @@ class FedBuff(Aggregator):
                 "count": jnp.zeros((), jnp.int32)}
 
     def step(self, state, arr):
-        accum = state["accum"] + arr.payload
+        accum = _acc(state["accum"], arr.payload)
         count = state["count"] + 1
         emit = count >= self.buffer_size
-        update = accum / count.astype(jnp.float32)       # count ≥ 1
-        new_state = {"accum": jnp.where(emit, jnp.zeros_like(accum), accum),
+        cf = count.astype(jnp.float32)                   # count ≥ 1
+        update = jax.tree.map(lambda a: a.astype(jnp.float32) / cf, accum)
+        new_state = {"accum": _gate(emit, jax.tree.map(jnp.zeros_like, accum),
+                                    accum),
                      "count": jnp.where(emit, 0, count)}
         return new_state, update, emit, _ONE
 
 
 @dataclasses.dataclass
 class CA2FL(Aggregator):
-    """Cache-aided calibration: v = h̄ + Σ_{i∈S}(Δ_i − h_i)/m (paper Alg. a.3)."""
+    """Cache-aided calibration: v = h̄ + Σ_{i∈S}(Δ_i − h_i)/m (paper Alg. a.3).
+
+    The per-client calibration cache h is a real gradient cache (FlatCache /
+    tree cache) so the paper's 8-bit compression applies to it exactly like
+    ACE's (App. F.3.3); `cache_init` stays False — h_i⁰ = 0 per Alg. a.3."""
     buffer_size: int = 10
+    cache_dtype: str = "float32"
     name = "ca2fl"
 
     def init_state(self, n, d, init_grads=None):
-        h = jnp.zeros((n, d), jnp.float32)
-        if init_grads is not None:
-            h = init_grads.astype(jnp.float32)
-        return {"h": h, "h_bar": jnp.mean(h, 0),
+        h = init_flat_cache(n, d, self.cache_dtype, init_grads)
+        return {"h": h, "h_bar": cache_mean(h),
                 "accum": jnp.zeros((d,), jnp.float32),
                 "count": jnp.zeros((), jnp.int32)}
 
     def step(self, state, arr):
         j = jnp.asarray(arr.client, jnp.int32)
-        old = jax.lax.dynamic_index_in_dim(state["h"], j, keepdims=False)
-        accum = state["accum"] + (arr.payload - old)
-        h = jax.lax.dynamic_update_index_in_dim(
-            state["h"], arr.payload.astype(jnp.float32), j, 0)
+        old = cache_row(state["h"], j)
+        accum = _acc(state["accum"],
+                     jax.tree.map(lambda g, o: g.astype(jnp.float32) - o,
+                                  arr.payload, old))
+        h = cache_set_row(state["h"], j, arr.payload)
         count = state["count"] + 1
         emit = count >= self.buffer_size
-        update = state["h_bar"] + accum / count.astype(jnp.float32)
+        cf = count.astype(jnp.float32)
+        update = jax.tree.map(
+            lambda hb, a: hb.astype(jnp.float32) + a.astype(jnp.float32) / cf,
+            state["h_bar"], accum)
+        h_bar = jax.tree.map(
+            lambda hb, hm: jnp.where(emit, hm, hb.astype(jnp.float32)
+                                     ).astype(hb.dtype),
+            state["h_bar"], cache_mean(h))
         new_state = {
-            "h": h,
-            "h_bar": jnp.where(emit, jnp.mean(h, 0), state["h_bar"]),
-            "accum": jnp.where(emit, jnp.zeros_like(accum), accum),
+            "h": h, "h_bar": h_bar,
+            "accum": _gate(emit, jax.tree.map(jnp.zeros_like, accum), accum),
             "count": jnp.where(emit, 0, count)}
         return new_state, update, emit, _ONE
 
@@ -172,13 +207,14 @@ class ACEDirect(Aggregator):
     """Paper Algorithm 1: cache row j ← g, update = mean over all n rows."""
     cache_dtype: str = "float32"
     name = "ace_direct"
+    cache_init = True
 
     def init_state(self, n, d, init_grads=None):
         return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads)}
 
     def step(self, state, arr):
-        cache = state["cache"].set_row(arr.client, arr.payload)
-        return {"cache": cache}, cache.mean(), _TRUE, _ONE
+        cache = cache_set_row(state["cache"], arr.client, arr.payload)
+        return {"cache": cache}, cache_mean(cache), _TRUE, _ONE
 
 
 @dataclasses.dataclass
@@ -186,11 +222,13 @@ class ACEIncremental(Aggregator):
     """Paper Algorithm a.5: u ← u + (g − dq(C_j))/n — O(d) per arrival.
 
     Exact under int8 cache: the subtracted value is the dequantized row that
-    was previously added, so ``u == mean_i dq(C_i)`` is invariant. The int8
-    path routes through the fused Pallas `cache_row_update` kernel (via the
-    backend-aware dispatch in repro/kernels/ops.py)."""
+    was previously added, so ``u == mean_i dq(C_i)`` is invariant. The flat
+    int8 path routes through the fused Pallas `cache_row_update` kernel (via
+    the backend-aware dispatch in repro/kernels/ops.py); tree caches take the
+    generic dequantize-subtract path."""
     cache_dtype: str = "float32"
     name = "ace"
+    cache_init = True
 
     def init_state(self, n, d, init_grads=None):
         cache = init_flat_cache(n, d, self.cache_dtype, init_grads)
@@ -199,7 +237,7 @@ class ACEIncremental(Aggregator):
     def step(self, state, arr):
         cache, u = state["cache"], state["u"]
         j = jnp.asarray(arr.client, jnp.int32)
-        if cache.data.dtype == jnp.int8:
+        if isinstance(cache, FlatCache) and cache.data.dtype == jnp.int8:
             c_row = jax.lax.dynamic_index_in_dim(cache.data, j, keepdims=False)
             old_scale = jax.lax.dynamic_index_in_dim(cache.scale, j,
                                                      keepdims=False)
@@ -211,10 +249,14 @@ class ACEIncremental(Aggregator):
                 jax.lax.dynamic_update_index_in_dim(
                     cache.scale, new_scale.astype(jnp.float32), j, 0))
         else:
-            old = cache.row(j)
-            cache = cache.set_row(j, arr.payload)
-            new = cache.row(j)
-            u = u + (new - old) / cache.n
+            n = cache_n(cache)
+            old = cache_row(cache, j)
+            cache = cache_set_row(cache, j, arr.payload)
+            new = cache_row(cache, j)
+            u = jax.tree.map(
+                lambda u_, nw, od: (u_.astype(jnp.float32)
+                                    + (nw - od) / n).astype(u_.dtype),
+                u, new, old)
         return {"cache": cache, "u": u}, u, _TRUE, _ONE
 
 
@@ -228,6 +270,7 @@ class ACED(Aggregator):
     tau_algo: int = 10
     cache_dtype: str = "float32"
     name = "aced"
+    cache_init = True
     #: emit = any(active) looks data-dependent, but emission is in fact
     #: guaranteed: the arriving client re-enters the active set before the
     #: any() — t_start[j] = t+1 gives t − t_start[j] = −1 ≤ tau_algo — so
@@ -241,16 +284,16 @@ class ACED(Aggregator):
 
     def step(self, state, arr):
         j = jnp.asarray(arr.client, jnp.int32)
-        cache = state["cache"].set_row(j, arr.payload)
+        cache = cache_set_row(state["cache"], j, arr.payload)
         t = jnp.asarray(arr.t, jnp.int32)
         t_start = jax.lax.dynamic_update_index_in_dim(
             state["t_start"], t + 1, j, 0)
         active = (t - t_start) <= self.tau_algo
         emit = jnp.any(active)
-        if cache.data.dtype == jnp.int8:
+        if isinstance(cache, FlatCache) and cache.data.dtype == jnp.int8:
             update = kernel_ops.masked_agg(cache.data, cache.scale, active)
         else:
-            update = cache.mean(active)
+            update = cache_mean(cache, active)
         return {"cache": cache, "t_start": t_start}, update, emit, _ONE
 
 
@@ -275,7 +318,7 @@ def make_aggregator(cfg) -> Aggregator:
     if a == "fedbuff":
         return FedBuff(buffer_size=cfg.buffer_size)
     if a == "ca2fl":
-        return CA2FL(buffer_size=cfg.buffer_size)
+        return CA2FL(buffer_size=cfg.buffer_size, cache_dtype=cfg.cache_dtype)
     if a == "ace_direct":
         return ACEDirect(cache_dtype=cfg.cache_dtype)
     if a == "ace":

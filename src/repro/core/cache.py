@@ -10,6 +10,18 @@ Quantization is symmetric per-row int8: scale = max|row| / 127. The ACE
 incremental rule stays *exact* under quantization because the server subtracts
 exactly the dequantized value it previously added: the invariant
 ``u == mean_i dq(C[i])`` holds to fp rounding.
+
+The layout-generic ``cache_row`` / ``cache_set_row`` / ``cache_mean`` /
+``cache_n`` dispatchers at the bottom let one `Aggregator.step` implementation
+(repro/core/aggregators.py) serve both layouts — the host simulators and scan
+engines on `FlatCache`, the pjit distributed path on tree caches — so the
+server rules exist exactly once.
+
+Sharding: flat-cache writes carry logical (cache_clients, cache_d) constraints
+(repro/sharding/rules.shard — a no-op outside a mesh context), so inside
+`use_rules(mesh)` the (n, d) cache lays out client-rows over the ``data`` axis
+and features over ``model`` (the sharded staleness scan,
+repro/core/scan_sharded.py).
 """
 from __future__ import annotations
 
@@ -17,6 +29,8 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.sharding.rules import shard
 
 INT8_MAX = 127.0
 
@@ -58,11 +72,14 @@ class FlatCache(NamedTuple):
         if self.data.dtype == jnp.int8:
             q, s = quantize_rows(g)
             return FlatCache(
-                jax.lax.dynamic_update_index_in_dim(self.data, q, i, 0),
-                jax.lax.dynamic_update_index_in_dim(self.scale, s, i, 0))
+                shard(jax.lax.dynamic_update_index_in_dim(self.data, q, i, 0),
+                      ("cache_clients", "cache_d")),
+                shard(jax.lax.dynamic_update_index_in_dim(self.scale, s, i, 0),
+                      ("cache_clients",)))
         return FlatCache(
-            jax.lax.dynamic_update_index_in_dim(
+            shard(jax.lax.dynamic_update_index_in_dim(
                 self.data, g.astype(self.data.dtype), i, 0),
+                ("cache_clients", "cache_d")),
             self.scale)
 
     def dequant(self):
@@ -89,9 +106,14 @@ def init_flat_cache(n: int, d: int, dtype: str = "float32",
     if init_rows is not None:
         if dt == jnp.int8:
             q, s = quantize_rows(init_rows)
-            return FlatCache(q, s)
-        return FlatCache(init_rows.astype(dt), jnp.ones((n,), jnp.float32))
-    return FlatCache(jnp.zeros((n, d), dt), jnp.ones((n,), jnp.float32))
+            return FlatCache(shard(q, ("cache_clients", "cache_d")),
+                             shard(s, ("cache_clients",)))
+        return FlatCache(shard(init_rows.astype(dt),
+                               ("cache_clients", "cache_d")),
+                         jnp.ones((n,), jnp.float32))
+    return FlatCache(shard(jnp.zeros((n, d), dt),
+                           ("cache_clients", "cache_d")),
+                     jnp.ones((n,), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -154,3 +176,44 @@ def tree_cache_mean(cache, mask=None):
 
 def tree_cache_nbytes(cache) -> int:
     return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))
+
+
+# ---------------------------------------------------------------------------
+# Layout-generic dispatch: one Aggregator.step implementation for both the
+# flat (simulator / scan) and tree (pjit distributed) cache layouts.
+# ---------------------------------------------------------------------------
+
+def is_tree_cache_leaf(x) -> bool:
+    """A tree-cache *leaf*: the {"q": ..., "scale"?: ...} dict one param leaf
+    stacks into (see init_tree_cache)."""
+    return isinstance(x, dict) and "q" in x
+
+
+def cache_n(cache) -> int:
+    """Number of client rows, either layout."""
+    if isinstance(cache, FlatCache):
+        return cache.n
+    leaf = jax.tree.leaves(cache, is_leaf=is_tree_cache_leaf)[0]
+    return leaf["q"].shape[0]
+
+
+def cache_row(cache, i):
+    """Dequantized f32 row i: (d,) for FlatCache, grads-like pytree for a
+    tree cache."""
+    if isinstance(cache, FlatCache):
+        return cache.row(i)
+    return tree_cache_row(cache, i)
+
+
+def cache_set_row(cache, i, g):
+    """Write (re-quantizing as needed) row i; returns the same layout."""
+    if isinstance(cache, FlatCache):
+        return cache.set_row(i, g)
+    return tree_cache_set_row(cache, i, g)
+
+
+def cache_mean(cache, mask=None):
+    """(Masked) mean over client rows — Alg. 1 line 10 / Alg. a.1 line 7."""
+    if isinstance(cache, FlatCache):
+        return cache.mean(mask)
+    return tree_cache_mean(cache, mask)

@@ -14,7 +14,10 @@ host-side from the delay model and fed as a scalar per step.
 
 Cache sharding: client axis → `data`, feature dims → `model` (via the leaf's
 own sharding), so aggregation adds no collectives beyond the gradient's own
-reduce-scatter.
+reduce-scatter. The sharded staleness scan (repro/core/scan_sharded.py) uses
+the same client/feature layout for its flat cache, and `apply_server_rule`
+below delegates to the layout-generic `Aggregator.step` protocol — the rule
+implementations exist once, in repro/core/aggregators.py.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import AFLConfig
 from repro.core import cache as cache_lib
+from repro.core.aggregators import Arrival, make_aggregator
 from repro.optim.optim import Optimizer
 
 
@@ -46,9 +50,11 @@ def init_afl_state(cfg: AFLConfig, grads_like):
     a = cfg.algorithm
     sdt = jnp.dtype(cfg.state_dtype)
     zeros = lambda: jax.tree.map(lambda g: jnp.zeros_like(g, sdt), grads_like)
-    if a in ("ace", "ace_direct"):
+    if a == "ace":
         return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
                 "u": zeros()}
+    if a == "ace_direct":
+        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype)}
     if a == "aced":
         return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
                 "t_start": jnp.ones((n,), jnp.int32)}
@@ -64,71 +70,22 @@ def init_afl_state(cfg: AFLConfig, grads_like):
 
 
 def apply_server_rule(cfg: AFLConfig, afl_state, grads, client, t, staleness):
-    """-> (new_afl_state, update (grads-like), lr_scale scalar)."""
-    n = cfg.n_clients
-    a = cfg.algorithm
-    one = jnp.ones((), jnp.float32)
-    if a == "ace":
-        cache, u = afl_state["cache"], afl_state["u"]
-        old = cache_lib.tree_cache_row(cache, client)
-        cache = cache_lib.tree_cache_set_row(cache, client, grads)
-        new = cache_lib.tree_cache_row(cache, client)
-        u = jax.tree.map(
-            lambda u_, nw, od: (u_.astype(jnp.float32) + (nw - od) / n
-                                ).astype(u_.dtype), u, new, old)
-        return {"cache": cache, "u": u}, u, one
-    if a == "ace_direct":
-        cache = cache_lib.tree_cache_set_row(afl_state["cache"], client, grads)
-        u = cache_lib.tree_cache_mean(cache)
-        return {"cache": cache, "u": afl_state["u"]}, u, one
-    if a == "aced":
-        cache = cache_lib.tree_cache_set_row(afl_state["cache"], client, grads)
-        t_start = afl_state["t_start"].at[client].set(t + 1)
-        active = (t - t_start) <= cfg.tau_algo
-        u = cache_lib.tree_cache_mean(cache, active)
-        # if no client active, emit zero update (w unchanged) — Alg. a.1 line 8
-        any_active = jnp.any(active).astype(jnp.float32)
-        u = jax.tree.map(lambda x: x * any_active, u)
-        return {"cache": cache, "t_start": t_start}, u, one
-    if a == "fedbuff":
-        accum = jax.tree.map(lambda a_, g: (a_.astype(jnp.float32)
-                                            + g.astype(jnp.float32)).astype(a_.dtype),
-                             afl_state["accum"], grads)
-        count = afl_state["count"] + 1
-        flush = count >= cfg.buffer_size
-        u = jax.tree.map(
-            lambda x: jnp.where(flush, x / count.astype(jnp.float32), 0.0), accum)
-        accum = jax.tree.map(lambda x: jnp.where(flush, 0.0, x), accum)
-        count = jnp.where(flush, 0, count)
-        return {"accum": accum, "count": count}, u, one
-    if a == "ca2fl":
-        h, accum = afl_state["h"], afl_state["accum"]
-        old = cache_lib.tree_cache_row(h, client)
-        accum = jax.tree.map(
-            lambda a_, g, o: (a_.astype(jnp.float32) + (g.astype(jnp.float32) - o)
-                              ).astype(a_.dtype), accum, grads, old)
-        h = cache_lib.tree_cache_set_row(h, client, grads)
-        count = afl_state["count"] + 1
-        flush = count >= cfg.buffer_size
-        v = jax.tree.map(
-            lambda hb, ac: jnp.where(flush, hb.astype(jnp.float32)
-                                     + ac.astype(jnp.float32)
-                                     / count.astype(jnp.float32), 0.0),
-            afl_state["h_bar"], accum)
-        h_bar = jax.tree.map(
-            lambda hb, hm: jnp.where(flush, hm, hb.astype(jnp.float32)
-                                     ).astype(hb.dtype),
-            afl_state["h_bar"], cache_lib.tree_cache_mean(h))
-        accum = jax.tree.map(lambda x: jnp.where(flush, 0.0, x), accum)
-        count = jnp.where(flush, 0, count)
-        return {"h": h, "h_bar": h_bar, "accum": accum, "count": count}, v, one
-    if a == "asgd":
-        return afl_state, grads, one
-    if a == "delay_asgd":
-        tau_c = cfg.max_delay_scale * cfg.delay_beta
-        s = jnp.minimum(one, tau_c / jnp.maximum(staleness.astype(jnp.float32), 1.0))
-        return afl_state, grads, s
-    raise ValueError(a)
+    """-> (new_afl_state, update (grads-like), lr_scale scalar).
+
+    Thin adapter over the unified `Aggregator.step` protocol
+    (repro/core/aggregators.py): the rule implementations are layout-generic
+    — cache access dispatches on the state's cache layout (tree caches here,
+    `FlatCache` in the simulators/scan engines) and all other arithmetic is
+    per-leaf — so the EXACT same transition serves host sim, single-device
+    scan, sharded scan and this pjit path. The `emit` gate folds into the
+    update (non-flushing arrivals emit a zero update, w unchanged — the train
+    step applies unconditionally)."""
+    agg = make_aggregator(cfg)
+    state, u, emit, scale = agg.step(
+        afl_state, Arrival(client, grads, t, staleness))
+    gate = emit.astype(jnp.float32)
+    u = jax.tree.map(lambda x: x.astype(jnp.float32) * gate, u)
+    return state, u, scale
 
 
 # ---------------------------------------------------------------------------
@@ -171,17 +128,40 @@ def optax_global_norm(tree):
                         for x in jax.tree.leaves(tree)))
 
 
-def afl_state_bytes(cfg: AFLConfig, params) -> int:
-    """Analytic server-state memory (paper Table a.3) without allocating."""
-    d_bytes = {"float32": 4, "bfloat16": 2, "int8": 1}[cfg.cache_dtype]
+def afl_state_bytes(cfg: AFLConfig, params, layout: str = "flat") -> int:
+    """Analytic server-state memory (paper Table a.3) without allocating —
+    exact: matches byte-for-byte what the corresponding init actually
+    allocates (pinned per algorithm × cache_dtype by tests/test_distributed).
+
+    layout="flat": `Aggregator.init_state` over the raveled d — a FlatCache
+    always carries an (n,) f32 scale row (even for float dtypes), counts are
+    int32 scalars, ACED's t_start is (n,) int32, and u/h_bar/accum are f32.
+    layout="tree": `init_afl_state` over the params pytree — per-leaf int8
+    caches carry one (n,) f32 scale each (float tree caches carry none), and
+    u/h_bar/accum live in cfg.state_dtype."""
+    db = {"float32": 4, "bfloat16": 2, "int8": 1}[cfg.cache_dtype]
     d = sum(int(x.size) for x in jax.tree.leaves(params))
+    n = cfg.n_clients
     a = cfg.algorithm
-    if a in ("ace", "ace_direct"):
-        return cfg.n_clients * d * d_bytes + d * 4
+    if layout == "flat":
+        cache = n * d * db + n * 4            # data + per-row f32 scale
+        vec = d * 4                           # u / h_bar / accum are f32
+    elif layout == "tree":
+        n_leaves = len(jax.tree.leaves(params))
+        cache = n * d * db + (n * 4 * n_leaves if cfg.cache_dtype == "int8"
+                              else 0)
+        vec = d * jnp.dtype(cfg.state_dtype).itemsize
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    count = 4                                 # int32 buffer counter
+    if a == "ace":
+        return cache + vec
+    if a == "ace_direct":
+        return cache
     if a == "aced":
-        return cfg.n_clients * d * d_bytes + cfg.n_clients * 4
+        return cache + n * 4                  # t_start (n,) int32
     if a == "ca2fl":
-        return cfg.n_clients * d * d_bytes + 2 * d * 4
+        return cache + 2 * vec + count        # h + h_bar + accum + count
     if a == "fedbuff":
-        return d * 4
+        return vec + count
     return 0

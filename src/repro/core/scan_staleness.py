@@ -67,6 +67,7 @@ from repro.core.scan_engine import (ScanResult, _payload_chain, _to_result,
                                     default_n_events)
 from repro.core.staleness_sim import (NEVER, default_tau_max,
                                       staleness_client_probs)
+from repro.sharding.rules import replicate, shard
 
 
 @dataclasses.dataclass
@@ -133,18 +134,23 @@ def build_staleness_randomness(seed: int, n_events: int, n_clients: int,
 
 def ring_read(ring: jnp.ndarray, cursor, tau):
     """``history[-(tau+1)]``: the model τ emitted updates ago. `cursor` is the
-    slot holding the newest model; requires τ ≤ min(t, capacity−1)."""
+    slot holding the newest model; requires τ ≤ min(t, capacity−1). The read
+    row keeps the buffer's feature sharding (history slots are replicated,
+    features shard over ``model`` — no-op outside a mesh context)."""
     slot = jnp.mod(cursor - tau, ring.shape[0])
-    return jax.lax.dynamic_index_in_dim(ring, slot, keepdims=False)
+    return shard(jax.lax.dynamic_index_in_dim(ring, slot, keepdims=False),
+                 ("cache_d",))
 
 
 def ring_append(ring: jnp.ndarray, cursor, w, emit):
     """``history.append(w)`` gated on `emit`: advance the cursor and write.
     When not emitting, cursor stays and `w` (unchanged) rewrites its own slot,
     so the write can be unconditional — trace-safe without a select on the
-    full buffer."""
+    full buffer. The written buffer re-asserts its (replicated-slots,
+    model-sharded-features) layout so the scan carry never all-gathers."""
     cursor = jnp.where(emit, jnp.mod(cursor + 1, ring.shape[0]), cursor)
-    return jax.lax.dynamic_update_index_in_dim(ring, w, cursor, 0), cursor
+    ring = jax.lax.dynamic_update_index_in_dim(ring, w, cursor, 0)
+    return shard(ring, (None, "cache_d")), cursor
 
 
 # ---------------------------------------------------------------------------
@@ -163,10 +169,11 @@ def snapshot_update(snaps, hits, marks, t_new, emit, w):
     """Write `w` into the snapshot row whose mark equals `t_new`, gated on
     `emit` (t only lands on a mark via an emitted update; freeze fast-forward
     jumps skip their marks exactly like the host's modulo cadence does).
-    Returns (snaps, hits)."""
+    Returns (snaps, hits). Snapshot rows keep mark-replicated, model-sharded
+    features (no-op outside a mesh context)."""
     hit = jnp.logical_and(emit, marks == t_new)          # (n_marks,) bool
     snaps = jnp.where(hit[:, None], w[None, :], snaps)
-    return snaps, jnp.logical_or(hits, hit)
+    return shard(snaps, (None, "cache_d")), jnp.logical_or(hits, hit)
 
 
 def _apply_evals(snaps, hits, marks, eval_fn, unravel):
@@ -244,7 +251,7 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
         if wants_init:
             def init_step(key, client):
                 p, _, key = payload_fn(w0, client, key)
-                return key, p
+                return key, replicate(p)
             key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n))
             state = agg.init_state(n, d, init_rows)
             # paper Alg. 1 line 4-5: apply u^0 before the loop
@@ -254,7 +261,8 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
             state = agg.init_state(n, d, None)
             t0 = 0
 
-        ring = jnp.zeros((S, d), jnp.float32).at[0].set(w0)
+        ring = shard(jnp.zeros((S, d), jnp.float32).at[0].set(w0),
+                     (None, "cache_d"))
         cursor = jnp.asarray(0, jnp.int32)
         if wants_init:           # history = [w^0, w^1] after the init update
             ring, cursor = ring_append(ring, cursor, w, True)
@@ -266,11 +274,13 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
                   "n_upd": jnp.asarray(t0, jnp.int32),
                   "ring": ring, "cursor": cursor}
         if marks is not None:
-            carry0["snaps"] = jnp.zeros((marks.shape[0], d), jnp.float32)
+            carry0["snaps"] = shard(jnp.zeros((marks.shape[0], d),
+                                              jnp.float32), (None, "cache_d"))
             carry0["hits"] = jnp.zeros((marks.shape[0],), jnp.bool_)
 
         def step(carry, ev):
             g_row, traw = ev
+            g_row = shard(g_row, ("cache_clients",))
             t = carry["t"]
             # availability: traced-t windows folded into the sampling logits
             gone = jnp.logical_and(leave_at <= t, t < rejoin_at)
@@ -287,13 +297,18 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
                               jnp.minimum(tau_max, carry["n_upd"]))
             w_stale = ring_read(carry["ring"], carry["cursor"], tau)
             payload, loss, key = payload_fn(w_stale, j, carry["key"])
+            # pin the raveled gradient replicated: the client grad is
+            # computed redundantly per device; only server state shards
+            # (see sharding/rules.replicate for the CPU-SPMD rationale)
+            payload = replicate(payload)
             state, u, emit, lr_scale = agg.step(
                 carry["state"], Arrival(j, payload, t, tau))
             emit = jnp.logical_and(emit, jnp.logical_and(t < T, any_alive))
             # frozen events perform no aggregator transition on the host
             state = _select_tree(any_alive, state, carry["state"])
             eta = lr_of_t(t, lr) * lr_scale
-            w = jnp.where(emit, carry["w"] - eta * u, carry["w"])
+            w = shard(jnp.where(emit, carry["w"] - eta * u, carry["w"]),
+                      ("cache_d",))
             ring, cursor = ring_append(carry["ring"], carry["cursor"], w, emit)
             t_new = jnp.where(any_alive, t + emit.astype(jnp.int32), thaw_t)
             out = {"loss": loss, "emit": emit, "t": t,
@@ -324,6 +339,16 @@ def _window_slack(n_clients: int, rejoin_at, windows) -> int:
     return n_clients if (rejoin_at is not None or windows is not None) else 0
 
 
+def _make_runner(mesh, **kwargs):
+    """Dispatch runner construction on `mesh`: None -> the plain jitted
+    runner; a Mesh -> the sharded GSPMD variant (lazy import — scan_sharded
+    imports this module)."""
+    if mesh is None:
+        return make_staleness_runner(**kwargs)
+    from repro.core.scan_sharded import make_sharded_staleness_runner
+    return make_sharded_staleness_runner(mesh=mesh, **kwargs)
+
+
 def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        n_clients: int, server_lr, T: int, beta: float = 5.0,
                        tau_max: Optional[int] = None, speed_skew: float = 0.0,
@@ -334,11 +359,14 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        eval_every: Optional[int] = None,
                        n_events: Optional[int] = None, local_steps: int = 1,
                        local_lr: float = 0.05, init_cache_grads: bool = True,
-                       seed: int = 0, record_w: bool = False) -> ScanResult:
+                       seed: int = 0, record_w: bool = False,
+                       mesh=None) -> ScanResult:
     """One device-resident run, trajectory-equivalent to
     ``StalenessSimulator(..., replay=build_staleness_randomness(seed, ...))``
     given the same arguments — including the eval cadence: with `eval_fn` and
-    `eval_every`, `ScanResult.evals`/`eval_ts` match `SimResult` exactly."""
+    `eval_every`, `ScanResult.evals`/`eval_ts` match `SimResult` exactly.
+    With `mesh` (a (data, model) jax Mesh), the run executes the sharded
+    GSPMD variant (repro/core/scan_sharded.py) — same trajectory ≤1e-5."""
     if n_events is None:
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
@@ -348,8 +376,8 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
                                       rejoin_at=rejoin_at, windows=windows)
     marks = (eval_marks_for(T, eval_every or T)
              if eval_fn is not None else None)
-    runner = make_staleness_runner(
-        grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+    runner = _make_runner(
+        mesh, grad_fn=grad_fn, params0=params0, aggregator=aggregator,
         n_clients=n_clients, T=T, beta=beta,
         server_lr=server_lr if callable(server_lr) else None,
         tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
@@ -415,12 +443,14 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
                         eval_every: Optional[int] = None,
                         n_events: Optional[int] = None, local_steps: int = 1,
                         local_lr: float = 0.05, init_cache_grads: bool = True,
-                        runner=None) -> List[ScanResult]:
+                        runner=None, mesh=None) -> List[ScanResult]:
     """vmap one compiled runner over seeds — the whole batch of staleness
     trajectories is one XLA computation. Pass `runner` (a
     `make_staleness_runner` result with matching statics, including
     `eval_marks` when `eval_fn`/`eval_every` are given) to reuse a compiled
-    runner across calls, e.g. across an lr grid."""
+    runner across calls, e.g. across an lr grid. With `mesh`, the runner is
+    the sharded variant (repro/core/scan_sharded.py) and every per-run cache/
+    ring/snapshot buffer lays out over the (data, model) mesh."""
     if n_events is None:
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
@@ -431,8 +461,8 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
     marks = (eval_marks_for(T, eval_every or T)
              if eval_fn is not None else None)
     if runner is None:
-        runner = make_staleness_runner(
-            grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+        runner = _make_runner(
+            mesh, grad_fn=grad_fn, params0=params0, aggregator=aggregator,
             n_clients=n_clients, T=T, beta=beta,
             server_lr=server_lr if callable(server_lr) else None,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
@@ -458,11 +488,11 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        eval_every: Optional[int] = None,
                        n_events: Optional[int] = None, local_steps: int = 1,
                        local_lr: float = 0.05, init_cache_grads: bool = True,
-                       runner=None) -> List[List[ScanResult]]:
+                       runner=None, mesh=None) -> List[List[ScanResult]]:
     """The lr-tuning grid × seed sweep as ONE vmapped computation: per-seed
     randomness is tiled across the lr axis (same trajectories, different
     step sizes — exactly the host grid in benchmarks/common.py `tuned`).
-    Returns ``results[i_lr][i_seed]``."""
+    Returns ``results[i_lr][i_seed]``. `mesh` picks the sharded runner."""
     if n_events is None:
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
@@ -476,8 +506,8 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
     tile = lambda a: jnp.concatenate([a] * L, 0)
     lr_vec = jnp.repeat(jnp.asarray(lrs, jnp.float32), ns)
     if runner is None:
-        runner = make_staleness_runner(
-            grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+        runner = _make_runner(
+            mesh, grad_fn=grad_fn, params0=params0, aggregator=aggregator,
             n_clients=n_clients, T=T, beta=beta,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,

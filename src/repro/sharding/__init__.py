@@ -1,2 +1,2 @@
-from repro.sharding.rules import (LOGICAL_RULES, logical_to_spec, shard,
-                                  use_rules, param_spec_fn)
+from repro.sharding.rules import (LOGICAL_RULES, logical_to_spec, replicate,
+                                  shard, use_rules, param_spec_fn)

@@ -85,6 +85,28 @@ def logical_to_spec(axes: Sequence[Optional[str]],
     return P(*out)
 
 
+def replicate(x: jax.Array) -> jax.Array:
+    """Pin `x` fully replicated (explicit all-None constraint); no-op without
+    an active mesh.
+
+    Unlike `shard` — which *skips* the constraint when every axis maps to
+    None, leaving the layout to GSPMD — this emits the constraint, cutting
+    sharding propagation at `x`. The sharded scan engine pins client
+    payloads with it: a raveled gradient is a concatenate of reshaped dot
+    results, and letting a downstream 1-D model-axis constraint propagate
+    back into that pattern miscompiles on the CPU SPMD partitioner
+    (contraction partial sums replicated over the data axis get summed,
+    scaling gradients by the replica count). Pinned payloads keep the client
+    grad computation replicated — the point of the sharded scan is to shard
+    the O(n·d) *server state*, not the client model."""
+    ctx = _active()
+    if ctx is None or ctx[0] is None:
+        return x
+    mesh = ctx[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim))))
+
+
 def shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
     """Apply a logical sharding constraint; no-op without an active mesh."""
     ctx = _active()

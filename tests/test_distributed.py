@@ -103,13 +103,57 @@ def test_int8_quantization_error_small_on_update_path():
 
 
 def test_afl_state_bytes_table():
-    """Paper Table a.3 storage accounting."""
+    """Paper Table a.3 storage accounting: leading-order terms, flat layout
+    (the FlatCache scale row and int32 counters ride on top)."""
     params = {"w": jnp.zeros(1000)}
     base = AFLConfig(algorithm="ace", n_clients=8, cache_dtype="float32")
-    assert afl_state_bytes(base, params) == 8 * 1000 * 4 + 4000
+    assert afl_state_bytes(base, params) == 8 * 1000 * 4 + 8 * 4 + 4000
     q = AFLConfig(algorithm="ace", n_clients=8, cache_dtype="int8")
-    assert afl_state_bytes(q, params) == 8 * 1000 + 4000
+    assert afl_state_bytes(q, params) == 8 * 1000 + 8 * 4 + 4000
     fb = AFLConfig(algorithm="fedbuff", n_clients=8)
-    assert afl_state_bytes(fb, params) == 4000
+    assert afl_state_bytes(fb, params) == 4000 + 4
     asgd = AFLConfig(algorithm="asgd", n_clients=8)
     assert afl_state_bytes(asgd, params) == 0
+
+
+_DTYPED = ("ace", "ace_direct", "aced", "ca2fl")
+
+
+@pytest.mark.parametrize("algo", ["asgd", "delay_asgd", "fedbuff", "ca2fl",
+                                  "ace", "ace_direct", "aced"])
+@pytest.mark.parametrize("cache_dtype", ["float32", "bfloat16", "int8"])
+def test_afl_state_bytes_matches_flat_allocation(algo, cache_dtype):
+    """The analytic count must equal byte-for-byte what Aggregator.init_state
+    actually allocates, for every algorithm × cache_dtype (this pinned the
+    old accounting's misses: FlatCache's always-present (n,) f32 scale row,
+    ca2fl's per-client h cache dtype, the int32 buffer counters, and aced's
+    int32 t_start width)."""
+    if cache_dtype != "float32" and algo not in _DTYPED:
+        pytest.skip("dtype-less state")
+    from repro.core.aggregators import make_aggregator
+    n, d = 5, 37
+    cfg = AFLConfig(algorithm=algo, n_clients=n, cache_dtype=cache_dtype,
+                    buffer_size=3, tau_algo=4)
+    agg = make_aggregator(cfg)
+    measured = agg.nbytes(agg.init_state(n, d, None))
+    assert afl_state_bytes(cfg, {"w": jnp.zeros(d)}) == measured
+
+
+@pytest.mark.parametrize("algo", ["asgd", "delay_asgd", "fedbuff", "ca2fl",
+                                  "ace", "ace_direct", "aced"])
+@pytest.mark.parametrize("cache_dtype", ["float32", "int8"])
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16"])
+def test_afl_state_bytes_matches_tree_allocation(algo, cache_dtype,
+                                                 state_dtype):
+    """layout="tree" must equal what init_afl_state allocates over a
+    multi-leaf params pytree: per-leaf int8 scale rows (none for float
+    caches) and u/h_bar/accum in cfg.state_dtype."""
+    if cache_dtype != "float32" and algo not in _DTYPED:
+        pytest.skip("dtype-less state")
+    n = 3
+    cfg = AFLConfig(algorithm=algo, n_clients=n, cache_dtype=cache_dtype,
+                    state_dtype=state_dtype, buffer_size=2, tau_algo=4)
+    grads_like = {"a": jnp.zeros((4, 6)), "b": jnp.zeros(7)}
+    state = init_afl_state(cfg, grads_like)
+    measured = sum(np.asarray(x).nbytes for x in jax.tree.leaves(state))
+    assert afl_state_bytes(cfg, grads_like, layout="tree") == measured

@@ -117,6 +117,50 @@ def test_snapshot_marks_match_host_cadence(every, T, steps):
             assert float(snaps[i][0]) == ref[m]
 
 
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(["ace", "ace_direct", "aced", "fedbuff", "ca2fl"]),
+       st.integers(2, 5), st.integers(1, 3), st.integers(4, 10),
+       st.integers(0, 10**6))
+def test_apply_server_rule_equals_unified_step(algo, n, M, steps, seed):
+    """`distributed.apply_server_rule` (tree caches, pjit path) must be the
+    SAME transition as the flat `Aggregator.step` (simulators, scan engines)
+    on random pytrees / client sequences / flush points — the adapter now
+    delegates to one rule implementation, and this property keeps the
+    de-duplication from silently drifting. float32 caches: int8 quantizes at
+    different granularity per layout (per raveled row vs per leaf row) by
+    design."""
+    import jax
+    from jax.flatten_util import ravel_pytree
+
+    from repro.configs.base import AFLConfig
+    from repro.core.aggregators import Arrival, make_aggregator
+    from repro.core.distributed import apply_server_rule, init_afl_state
+
+    rng = np.random.default_rng(seed)
+    grads_like = {"a": jnp.zeros((3, 4)), "b": jnp.zeros(5)}
+    d = 17
+    cfg = AFLConfig(algorithm=algo, n_clients=n, buffer_size=M, tau_algo=3)
+    tree_state = init_afl_state(cfg, grads_like)
+    flat_agg = make_aggregator(cfg)
+    flat_state = flat_agg.init_state(n, d, None)
+    for t in range(steps):
+        j = int(rng.integers(n))
+        tau = int(rng.integers(0, 6))
+        flat = jnp.asarray(rng.normal(size=d), jnp.float32)
+        g = {"a": jnp.asarray(flat[:12].reshape(3, 4)),
+             "b": jnp.asarray(flat[12:])}
+        assert np.allclose(ravel_pytree(g)[0], flat)    # same payload bits
+        tree_state, u_tree, sc_tree = apply_server_rule(
+            cfg, tree_state, g, jnp.int32(j), jnp.int32(t), jnp.int32(tau))
+        flat_state, u_flat, emit, sc_flat = flat_agg.step(
+            flat_state, Arrival(j, flat, t, tau))
+        gated = np.asarray(u_flat) * float(np.asarray(emit))
+        np.testing.assert_allclose(np.asarray(ravel_pytree(u_tree)[0]),
+                                   gated, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(sc_tree), float(sc_flat),
+                                   rtol=1e-6, atol=0)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 8), st.integers(8, 128), st.integers(0, 10**6))
 def test_cache_update_invariant(n, d, seed):

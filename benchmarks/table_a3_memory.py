@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import AFLConfig
-from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
+from repro.core.aggregators import (ACED, ACEDDirect, ACEDirect,
+                                    ACEIncremental, CA2FL, CA2FLDirect,
                                     DelayAdaptiveASGD, FedBuff, VanillaASGD)
 from repro.core.distributed import afl_state_bytes, init_afl_state
 
@@ -26,9 +27,16 @@ def main(fast=True):
              ("ca2fl", CA2FL(buffer_size=10), "ca2fl"),
              ("ca2fl_int8", CA2FL(buffer_size=10, cache_dtype="int8"),
               "ca2fl"),
+             ("ca2fl_direct", CA2FLDirect(buffer_size=10), "ca2fl_direct"),
              ("ace_fp32", ACEIncremental(), "ace"),
              ("ace_int8", ACEIncremental(cache_dtype="int8"), "ace"),
-             ("aced_int8", ACED(cache_dtype="int8"), "aced")]
+             ("ace_direct_int8", ACEDirect(cache_dtype="int8"), "ace_direct"),
+             # incremental ACED pays its O(d) speed with asum/init_sum + the
+             # owner-ring; the direct row is the paper's literal accounting
+             ("aced_fp32", ACED(), "aced"),
+             ("aced_int8", ACED(cache_dtype="int8"), "aced"),
+             ("aced_direct_int8", ACEDDirect(cache_dtype="int8"),
+              "aced_direct")]
     params = {"w": jnp.zeros(d)}
     for name, agg, algo_key in algos:
         state = agg.init_state(n, d, None)

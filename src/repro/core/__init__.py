@@ -1,11 +1,12 @@
-from repro.core.aggregators import (ACED, ALGORITHMS, ACEDirect,
+from repro.core.aggregators import (ACED, ALGORITHMS, ACEDDirect, ACEDirect,
                                     ACEIncremental, Aggregator, Arrival,
-                                    CA2FL, DelayAdaptiveASGD, FedBuff,
-                                    VanillaASGD, make_aggregator)
-from repro.core.cache import (FlatCache, dequantize_rows, init_flat_cache,
-                              init_tree_cache, quantize_rows, tree_cache_mean,
-                              tree_cache_nbytes, tree_cache_row,
-                              tree_cache_set_row)
+                                    CA2FL, CA2FLDirect, DelayAdaptiveASGD,
+                                    FedBuff, VanillaASGD, make_aggregator)
+from repro.core.cache import (FlatCache, cache_set_row_delta, dequantize_rows,
+                              init_flat_cache, init_tree_cache, quantize_rows,
+                              tree_cache_mean, tree_cache_nbytes,
+                              tree_cache_row, tree_cache_set_row,
+                              tree_cache_set_row_delta)
 from repro.core.delays import (ExponentialDelays, Schedule, arrival_schedule,
                                build_schedule)
 from repro.core.scan_engine import (ScanResult, make_scan_runner, run_scan,

@@ -4,10 +4,15 @@ Implemented exactly as specified:
   * Vanilla ASGD            [Mishchenko et al., 2022]     (m=1, immediate)
   * Delay-adaptive ASGD     [Koloskova et al., 2022]      (m=1, lr ∝ 1/τ for stragglers)
   * FedBuff                 [Nguyen et al., 2022]         (buffer M, partial participation)
-  * CA²FL                   [Wang et al., 2024]           (buffer M + cached calibration)
+  * CA²FL                   [Wang et al., 2024]           (buffer M + cached calibration;
+                                                           lazy O(d) h_sum — CA2FLDirect
+                                                           keeps the literal re-reduction)
   * ACE direct              (paper Alg. 1)                (all-client cache, mean each arrival)
   * ACE incremental         (paper Alg. a.5)              (u += (g_new − g_prev)/n, O(d))
-  * ACED                    (paper Alg. a.1)              (bounded-delay active set τ_algo)
+  * ACED                    (paper Alg. a.1)              (bounded-delay active set τ_algo;
+                                                           incremental O(d) sum + expiry
+                                                           owner-ring — ACEDDirect keeps
+                                                           the literal masked mean)
 
 Every rule is a pure, trace-safe transition
 
@@ -30,6 +35,29 @@ array is its own single leaf). `distributed.apply_server_rule` is a thin
 adapter over this same `step` protocol, so host sim, single-device scan,
 sharded scan and pod-scale pjit all run ONE rule implementation.
 The server applies ``w ← w − η · lr_scale · update``.
+
+**O(d) hot-path contract**: no production rule's `step` may reduce over the
+client axis — every per-event transition is O(d) (+O(n) index bookkeeping).
+ACE carries its running mean (Alg. a.5), ACED a running active-set sum with
+an expiry owner-ring, CA²FL a running calibration sum; all three fold cache
+writes through `cache_set_row_delta` (fused int8 `row_delta` kernel on the
+flat layout). The literal O(n·d) re-reductions survive only as the pinned
+reference rules `ACEDirect`/`ACEDDirect`/`CA2FLDirect`, which every
+incremental rule is differentially tested against (≤1e-5 across dropout,
+leave/re-join windows, int8 caches and freeze/thaw — see
+tests/test_aggregators.py, tests/test_scan_staleness.py,
+tests/test_scan_sharded.py).
+
+Step contract addendum for the incremental rules: across the `step` calls a
+state actually receives, `arr.t` must be **strictly increasing** (arbitrary
+forward jumps allowed — availability-window thaws), because the ACED
+owner-ring keys one client per t_start value. The engines guarantee this
+while updates are consumed: ACED emits on every processed arrival, so t
+advances by ≥1 per step, and frozen events keep the previous state. The one
+exception is the scan engines' post-budget tail (t stalled at T with
+emission force-gated off): distinct same-t arrivals there can orphan a ring
+slot, so the *final* ACED asum/count returned by a scan run is not
+meaningful — only emitted updates are, and those all precede the stall.
 """
 from __future__ import annotations
 
@@ -40,9 +68,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cache import (FlatCache, cache_mean, cache_n, cache_row,
-                              cache_set_row, init_flat_cache)
+                              cache_set_row, cache_set_row_delta,
+                              init_flat_cache)
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
+from repro.sharding.rules import shard
 
 
 class Arrival(NamedTuple):
@@ -77,6 +107,27 @@ def _acc(a, x):
 def _gate(emit, new, old):
     """Per-leaf ``where(emit, new, old)``."""
     return jax.tree.map(lambda n_, o_: jnp.where(emit, n_, o_), new, old)
+
+
+def _where_sub(a, x, gate):
+    """Per-leaf ``a − x`` where `gate` else ``a`` (f32 accumulation, leaf
+    dtype preserved) — the expiry primitive of the running-sum rules."""
+    return jax.tree.map(
+        lambda a_, x_: jnp.where(gate,
+                                 a_.astype(jnp.float32)
+                                 - x_.astype(jnp.float32),
+                                 a_.astype(jnp.float32)).astype(a_.dtype),
+        a, x)
+
+
+def _shard_vec(vec, cache):
+    """Re-assert the feature sharding on running-sum state in the flat (d,)
+    layout (cache_d → model axis; no-op outside a mesh context), so the
+    sharded scan carries the new O(d) state without all-gathering. Tree
+    layouts keep their leaves' own layouts."""
+    if isinstance(cache, FlatCache):
+        return jax.tree.map(lambda a: shard(a, ("cache_d",)), vec)
+    return vec
 
 
 class Aggregator:
@@ -153,8 +204,11 @@ class FedBuff(Aggregator):
         accum = _acc(state["accum"], arr.payload)
         count = state["count"] + 1
         emit = count >= self.buffer_size
-        cf = count.astype(jnp.float32)                   # count ≥ 1
-        update = jax.tree.map(lambda a: a.astype(jnp.float32) / cf, accum)
+        # emit-gated division: buffered (non-flushing) arrivals do no update
+        # arithmetic — the scalar reciprocal is zeroed under the gate, so a
+        # non-emitting step's "update" is a multiply-by-0, not an O(d) divide
+        inv = jnp.where(emit, 1.0 / count.astype(jnp.float32), 0.0)
+        update = jax.tree.map(lambda a: a.astype(jnp.float32) * inv, accum)
         new_state = {"accum": _gate(emit, jax.tree.map(jnp.zeros_like, accum),
                                     accum),
                      "count": jnp.where(emit, 0, count)}
@@ -163,14 +217,66 @@ class FedBuff(Aggregator):
 
 @dataclasses.dataclass
 class CA2FL(Aggregator):
-    """Cache-aided calibration: v = h̄ + Σ_{i∈S}(Δ_i − h_i)/m (paper Alg. a.3).
+    """Cache-aided calibration: v = h̄ + Σ_{i∈S}(Δ_i − h_i)/m (paper Alg. a.3)
+    with a **lazy calibration mean** — O(d) per arrival.
 
     The per-client calibration cache h is a real gradient cache (FlatCache /
     tree cache) so the paper's 8-bit compression applies to it exactly like
-    ACE's (App. F.3.3); `cache_init` stays False — h_i⁰ = 0 per Alg. a.3."""
+    ACE's (App. F.3.3); `cache_init` stays False — h_i⁰ = 0 per Alg. a.3.
+
+    The running sum ``h_sum = Σ_i dq(h_i)`` is maintained through the
+    `cache_set_row_delta` swap (``h_sum += dq(new) − dq(old)``, exact under
+    int8), and ``h̄ = h_sum/n`` folds into the emit-gated refresh only — no
+    arrival re-reduces the (n, d) cache the way `CA2FLDirect` does."""
     buffer_size: int = 10
     cache_dtype: str = "float32"
     name = "ca2fl"
+
+    def init_state(self, n, d, init_grads=None):
+        h = init_flat_cache(n, d, self.cache_dtype, init_grads)
+        h_bar = cache_mean(h)
+        h_sum = _shard_vec(jax.tree.map(lambda m: m * n, h_bar), h)
+        return {"h": h, "h_bar": h_bar, "h_sum": h_sum,
+                "accum": jnp.zeros((d,), jnp.float32),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def step(self, state, arr):
+        j = jnp.asarray(arr.client, jnp.int32)
+        h, delta, old = cache_set_row_delta(state["h"], j, arr.payload)
+        accum = _acc(state["accum"],
+                     jax.tree.map(lambda g, o: g.astype(jnp.float32) - o,
+                                  arr.payload, old))
+        h_sum = _shard_vec(_acc(state["h_sum"], delta), h)
+        count = state["count"] + 1
+        emit = count >= self.buffer_size
+        # emit-gated O(d) math: scalar reciprocal zeroed under the gate, so
+        # buffered arrivals do no division sweep between flushes
+        inv = jnp.where(emit, 1.0 / count.astype(jnp.float32), 0.0)
+        gate = emit.astype(jnp.float32)
+        update = jax.tree.map(
+            lambda hb, a: hb.astype(jnp.float32) * gate
+            + a.astype(jnp.float32) * inv,
+            state["h_bar"], accum)
+        inv_n = 1.0 / cache_n(h)
+        h_bar = jax.tree.map(
+            lambda hb, hs: jnp.where(emit, hs.astype(jnp.float32) * inv_n,
+                                     hb.astype(jnp.float32)).astype(hb.dtype),
+            state["h_bar"], h_sum)
+        new_state = {
+            "h": h, "h_bar": h_bar, "h_sum": h_sum,
+            "accum": _gate(emit, jax.tree.map(jnp.zeros_like, accum), accum),
+            "count": jnp.where(emit, 0, count)}
+        return new_state, update, emit, _ONE
+
+
+@dataclasses.dataclass
+class CA2FLDirect(Aggregator):
+    """Paper Alg. a.3, literal: re-reduces ``cache_mean(h)`` over the whole
+    (n, d) calibration cache on every arrival — the pinned O(n·d) reference
+    the lazy `CA2FL` is differentially tested against (≤1e-5)."""
+    buffer_size: int = 10
+    cache_dtype: str = "float32"
+    name = "ca2fl_direct"
 
     def init_state(self, n, d, init_grads=None):
         h = init_flat_cache(n, d, self.cache_dtype, init_grads)
@@ -262,21 +368,168 @@ class ACEIncremental(Aggregator):
 
 @dataclasses.dataclass
 class ACED(Aggregator):
-    """Paper Algorithm a.1: active set A(t) = {i : t − t_start_i ≤ τ_algo}.
+    """Paper Algorithm a.1 with an **incremental active-set sum** — O(d) per
+    event (the ACE-incremental pattern of Alg. a.5 extended to the
+    bounded-delay active set A(t) = {i : t − t_start_i ≤ τ_algo}).
 
-    Emission is a traced mask (`emit = any(active)`) — no per-arrival host
-    sync. The int8 masked mean routes through the Pallas `masked_agg` kernel
-    dispatch."""
+    State beyond the cache:
+      * ``asum (d,)`` / ``count`` — running Σ_{i∈A} dq(C_i) and |A|. On
+        arrival the client's previous dequantized row is swapped out and the
+        new one in (exact under int8 — `cache_set_row_delta` subtracts
+        exactly the value previously added).
+      * ``ring (τ_algo+2,)`` int32 owner-ring keyed on ``t_start mod P`` —
+        active t_start values live in [t−τ_algo, t+1], exactly P = τ_algo+2
+        residues, and each emitted step hands a new t_start to one client,
+        so expiries amortize to ≤1 per event: the step at time t retires the
+        slot whose value fell to t−τ_algo−1. A re-arrival before expiry
+        *disowns* its old slot; an availability-window thaw jump retires
+        min(Δt, P) slots in one sweep (every live owner is expired once
+        Δt ≥ P, and the P visited residues cover the whole ring).
+      * ``init_sum``/``init_count``/``init_mask`` — the init batch is the one
+        case the ring cannot carry (all n clients share t_start = 1): its
+        cohort sum is maintained incrementally as members re-arrive and
+        subtracted in a single where-gated O(d) correction when t first
+        reaches τ_algo+2 (also when a freeze jump leaps straight past it).
+      * ``t_prev`` — last processed arrival time, bounding the expiry sweep.
+
+    Emission is a traced mask (`emit = count > 0`) — no per-arrival host
+    sync, and no arrival ever reduces over the (n, d) cache (that literal
+    form survives as `ACEDDirect`, the pinned differential reference)."""
     tau_algo: int = 10
     cache_dtype: str = "float32"
     name = "aced"
     cache_init = True
-    #: emit = any(active) looks data-dependent, but emission is in fact
+    #: emit = count > 0 looks data-dependent, but emission is in fact
     #: guaranteed: the arriving client re-enters the active set before the
-    #: any() — t_start[j] = t+1 gives t − t_start[j] = −1 ≤ tau_algo — so
+    #: count — t_start[j] = t+1 gives t − t_start[j] = −1 ≤ tau_algo — so
     #: every processed arrival flushes (guaranteed_emit stays True; the scan
     #: engines' _to_result raises if an event budget ever starves before T,
     #: pinned by the fig3 50%-dropout regression test)
+
+    @property
+    def ring_size(self) -> int:
+        return self.tau_algo + 2
+
+    def init_state(self, n, d, init_grads=None):
+        cache = init_flat_cache(n, d, self.cache_dtype, init_grads)
+        asum = _shard_vec(cache.dequant().sum(0), cache)   # one-time O(n·d)
+        return {"cache": cache,
+                "t_start": jnp.ones((n,), jnp.int32),
+                "ring": jnp.full((self.ring_size,), -1, jnp.int32),
+                "asum": asum,
+                "count": jnp.asarray(n, jnp.int32),
+                "t_prev": jnp.zeros((), jnp.int32),
+                "init_sum": asum,
+                "init_count": jnp.asarray(n, jnp.int32),
+                "init_mask": jnp.ones((n,), jnp.bool_)}
+
+    def step(self, state, arr):
+        j = jnp.asarray(arr.client, jnp.int32)
+        t = jnp.asarray(arr.t, jnp.int32)
+        tau, P = self.tau_algo, self.ring_size
+        cache, t_start = state["cache"], state["t_start"]
+        ring, asum, count = state["ring"], state["asum"], state["count"]
+
+        # 1. expiry sweep bookkeeping: the slot whose t_start fell to t−τ−1
+        # (≤1 per emitted step — hoisted; its O(d) subtraction is fused into
+        # the single asum expression below). Thaw jumps retire up to Δt−1
+        # *older* slots through the fori_loop, which ordinary steps never
+        # enter (Δt == 1 → zero iterations).
+        dt = jnp.clip(t - state["t_prev"], 0, P)
+        s0 = jnp.mod(t - tau - 1, P)
+        k0 = jax.lax.dynamic_index_in_dim(ring, s0, keepdims=False)
+        dead = jnp.logical_and(dt >= 1, jnp.logical_and(
+            k0 >= 0, t_start[jnp.maximum(k0, 0)] <= t - tau - 1))
+        dead_row = cache_row(cache, jnp.maximum(k0, 0))
+        count = count - dead.astype(jnp.int32)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, jnp.where(dead, -1, k0), s0, 0)
+
+        def expire(i, val):
+            asum, count, ring = val
+            s = jnp.mod(t - tau - 1 - i, P)
+            k = jax.lax.dynamic_index_in_dim(ring, s, keepdims=False)
+            ks = jnp.maximum(k, 0)
+            gone = jnp.logical_and(k >= 0, t_start[ks] <= t - tau - 1)
+            asum = _where_sub(asum, cache_row(cache, ks), gone)
+            count = count - gone.astype(jnp.int32)
+            ring = jax.lax.dynamic_update_index_in_dim(
+                ring, jnp.where(gone, -1, k), s, 0)
+            return asum, count, ring
+
+        asum, count, ring = jax.lax.fori_loop(1, dt, expire,
+                                              (asum, count, ring))
+
+        # 2. init-batch simultaneous-expiry gate at t = τ_algo+2 (one-time;
+        # covers jumps that leap past it) — scalar bookkeeping here, the
+        # O(d) correction rides the fused expression below
+        init_sum, init_count = state["init_sum"], state["init_count"]
+        init_mask = state["init_mask"]
+        fire = jnp.logical_and(init_count > 0, t >= tau + 2)
+        count = count - jnp.where(fire, init_count, 0)
+        init_count = jnp.where(fire, 0, init_count)
+        init_mask = jnp.logical_and(init_mask, jnp.logical_not(fire))
+
+        # 3. arrival: swap row j in. One fused O(d) pass updates the active
+        # sum with the slot-0 expiry, the init correction and the swap (0/1
+        # scalar multiplies — bit-identical to the where-gated sequence):
+        # an active client contributes its delta, a returning one its whole
+        # new row.
+        old_ts = t_start[j]
+        was_active = old_ts >= t - tau
+        was_init = init_mask[j]
+        cache, delta, old = cache_set_row_delta(cache, j, arr.payload)
+        g_dead = dead.astype(jnp.float32)
+        g_fire = fire.astype(jnp.float32)
+        g_ret = 1.0 - was_active.astype(jnp.float32)   # returning client
+        asum = _shard_vec(jax.tree.map(
+            lambda a, r_, i_, d_, o: (a.astype(jnp.float32) - g_dead * r_
+                                      - g_fire * i_.astype(jnp.float32)
+                                      + d_ + g_ret * o).astype(a.dtype),
+            asum, dead_row, init_sum, delta, old), cache)
+        count = count + 1 - was_active.astype(jnp.int32)
+        g_wi = was_init.astype(jnp.float32)
+        init_sum = _shard_vec(jax.tree.map(
+            lambda i_, o: ((1.0 - g_fire) * i_.astype(jnp.float32)
+                           - g_wi * o).astype(i_.dtype),
+            init_sum, old), cache)
+        init_count = init_count - was_init.astype(jnp.int32)
+        init_mask = jax.lax.dynamic_update_index_in_dim(
+            init_mask, jnp.zeros((), jnp.bool_), j, 0)
+
+        # 4. ring ownership: disown j's previous slot (re-arrival before
+        # expiry must not leave a stale owner), then own (t+1) mod P.
+        # Claiming assumes no *other* live client holds t_start == t+1 —
+        # the strictly-increasing-t step contract (module docstring); a
+        # same-t distinct arrival only occurs in the engines' discarded
+        # post-budget tail.
+        s_old = jnp.mod(old_ts, P)
+        cur = jax.lax.dynamic_index_in_dim(ring, s_old, keepdims=False)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, jnp.where(cur == j, -1, cur), s_old, 0)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, j, jnp.mod(t + 1, P), 0)
+        t_start = jax.lax.dynamic_update_index_in_dim(t_start, t + 1, j, 0)
+
+        inv = 1.0 / jnp.maximum(count, 1).astype(jnp.float32)
+        update = jax.tree.map(lambda a: a.astype(jnp.float32) * inv, asum)
+        new_state = {"cache": cache, "t_start": t_start, "ring": ring,
+                     "asum": asum, "count": count, "t_prev": t,
+                     "init_sum": init_sum, "init_count": init_count,
+                     "init_mask": init_mask}
+        return new_state, update, count > 0, _ONE
+
+
+@dataclasses.dataclass
+class ACEDDirect(Aggregator):
+    """Paper Algorithm a.1, literal: masked mean over the whole (n, d) cache
+    on every arrival — the pinned O(n·d) reference the incremental `ACED` is
+    differentially tested against (≤1e-5, all scenarios). The int8 masked
+    mean routes through the Pallas `masked_agg` kernel dispatch."""
+    tau_algo: int = 10
+    cache_dtype: str = "float32"
+    name = "aced_direct"
+    cache_init = True
 
     def init_state(self, n, d, init_grads=None):
         return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads),
@@ -302,9 +555,11 @@ ALGORITHMS = {
     "delay_asgd": DelayAdaptiveASGD,
     "fedbuff": FedBuff,
     "ca2fl": CA2FL,
+    "ca2fl_direct": CA2FLDirect,
     "ace_direct": ACEDirect,
     "ace": ACEIncremental,
     "aced": ACED,
+    "aced_direct": ACEDDirect,
 }
 
 
@@ -319,10 +574,15 @@ def make_aggregator(cfg) -> Aggregator:
         return FedBuff(buffer_size=cfg.buffer_size)
     if a == "ca2fl":
         return CA2FL(buffer_size=cfg.buffer_size, cache_dtype=cfg.cache_dtype)
+    if a == "ca2fl_direct":
+        return CA2FLDirect(buffer_size=cfg.buffer_size,
+                           cache_dtype=cfg.cache_dtype)
     if a == "ace_direct":
         return ACEDirect(cache_dtype=cfg.cache_dtype)
     if a == "ace":
         return ACEIncremental(cache_dtype=cfg.cache_dtype)
     if a == "aced":
         return ACED(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype)
+    if a == "aced_direct":
+        return ACEDDirect(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype)
     raise ValueError(f"unknown AFL algorithm {a!r}")

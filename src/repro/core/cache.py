@@ -30,6 +30,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
 from repro.sharding.rules import shard
 
 INT8_MAX = 127.0
@@ -81,6 +83,36 @@ class FlatCache(NamedTuple):
                 self.data, g.astype(self.data.dtype), i, 0),
                 ("cache_clients", "cache_d")),
             self.scale)
+
+    def set_row_delta(self, i, g):
+        """Write row i and return ``(cache', delta, old)`` where
+        ``old = dq(row_i)`` before the write and ``delta = dq(row_i') − old``
+        — the exact change a running sum of dequantized rows sees. The int8
+        path routes through the fused `row_delta` kernel dispatch (one HBM
+        pass: dequantize-old + quantize-new + delta); float paths are a read
+        + write. Row outputs keep the feature sharding (``cache_d``)."""
+        i = jnp.asarray(i, jnp.int32)
+        if self.data.dtype == jnp.int8:
+            c_row = jax.lax.dynamic_index_in_dim(self.data, i, keepdims=False)
+            old_scale = jax.lax.dynamic_index_in_dim(self.scale, i,
+                                                     keepdims=False)
+            new_scale = kernel_ref.row_scale(g)
+            delta, q = kernel_ops.row_delta(g, c_row, old_scale, new_scale)
+            cache = FlatCache(
+                shard(jax.lax.dynamic_update_index_in_dim(self.data, q, i, 0),
+                      ("cache_clients", "cache_d")),
+                shard(jax.lax.dynamic_update_index_in_dim(
+                    self.scale, new_scale.astype(jnp.float32), i, 0),
+                    ("cache_clients",)))
+            # dequantize the old row directly — reconstructing it as
+            # q·new_scale − delta would cancel catastrophically when the
+            # client's successive gradients differ by orders of magnitude
+            old = c_row.astype(jnp.float32) * old_scale
+            return cache, shard(delta, ("cache_d",)), shard(old, ("cache_d",))
+        old = self.row(i)
+        cache = self.set_row(i, g)
+        new = g.astype(self.data.dtype).astype(jnp.float32)
+        return cache, shard(new - old, ("cache_d",)), shard(old, ("cache_d",))
 
     def dequant(self):
         """(n, d) f32 view."""
@@ -161,6 +193,18 @@ def tree_cache_set_row(cache, i, grads):
                         is_leaf=lambda x: isinstance(x, dict) and "q" in x)
 
 
+def tree_cache_set_row_delta(cache, i, grads):
+    """Tree-cache analogue of `FlatCache.set_row_delta`: returns
+    ``(cache', delta, old)`` with `delta`/`old` grads-like f32 pytrees.
+    Per-leaf generic path (the pjit train step fuses these elementwise ops
+    itself; the Pallas fusion targets the flat scan layout)."""
+    old = tree_cache_row(cache, i)
+    new_cache = tree_cache_set_row(cache, i, grads)
+    new = tree_cache_row(new_cache, i)
+    delta = jax.tree.map(lambda a, b: a - b, new, old)
+    return new_cache, delta, old
+
+
 def tree_cache_mean(cache, mask=None):
     def leaf(c):
         rows = c["q"].astype(jnp.float32)
@@ -210,6 +254,17 @@ def cache_set_row(cache, i, g):
     if isinstance(cache, FlatCache):
         return cache.set_row(i, g)
     return tree_cache_set_row(cache, i, g)
+
+
+def cache_set_row_delta(cache, i, g):
+    """Write row i, returning ``(cache', delta, old)`` — the running-sum
+    primitive behind the O(d) server rules: ``delta = dq(new) − dq(old)``
+    folds into an incremental aggregate (ACED's active-set sum, CA²FL's
+    h_sum) and ``old`` is exactly the dequantized value previously added, so
+    those aggregates stay exact under int8 (paper Alg. a.5 invariant)."""
+    if isinstance(cache, FlatCache):
+        return cache.set_row_delta(i, g)
+    return tree_cache_set_row_delta(cache, i, g)
 
 
 def cache_mean(cache, mask=None):

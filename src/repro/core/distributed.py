@@ -56,11 +56,29 @@ def init_afl_state(cfg: AFLConfig, grads_like):
     if a == "ace_direct":
         return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype)}
     if a == "aced":
+        # incremental active-set state (repro/core/aggregators.ACED): the
+        # zero cache starts fully active (count = n), the owner-ring empty,
+        # and the whole fleet in the init cohort — mirrors the flat
+        # Aggregator.init_state byte-for-byte in accounting (afl_state_bytes)
+        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
+                "t_start": jnp.ones((n,), jnp.int32),
+                "ring": jnp.full((cfg.tau_algo + 2,), -1, jnp.int32),
+                "asum": zeros(),
+                "count": jnp.asarray(n, jnp.int32),
+                "t_prev": jnp.zeros((), jnp.int32),
+                "init_sum": zeros(),
+                "init_count": jnp.asarray(n, jnp.int32),
+                "init_mask": jnp.ones((n,), jnp.bool_)}
+    if a == "aced_direct":
         return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
                 "t_start": jnp.ones((n,), jnp.int32)}
     if a == "fedbuff":
         return {"accum": zeros(), "count": jnp.zeros((), jnp.int32)}
     if a == "ca2fl":
+        return {"h": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
+                "h_bar": zeros(), "h_sum": zeros(), "accum": zeros(),
+                "count": jnp.zeros((), jnp.int32)}
+    if a == "ca2fl_direct":
         return {"h": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
                 "h_bar": zeros(), "accum": zeros(),
                 "count": jnp.zeros((), jnp.int32)}
@@ -159,8 +177,16 @@ def afl_state_bytes(cfg: AFLConfig, params, layout: str = "flat") -> int:
     if a == "ace_direct":
         return cache
     if a == "aced":
+        # incremental active-set state: t_start (n,) int32, owner-ring
+        # (tau_algo+2,) int32, asum + init_sum running vectors, count/t_prev/
+        # init_count int32 scalars, init_mask (n,) bool
+        return (cache + n * 4 + (cfg.tau_algo + 2) * 4 + 2 * vec
+                + 3 * 4 + n * 1)
+    if a == "aced_direct":
         return cache + n * 4                  # t_start (n,) int32
     if a == "ca2fl":
+        return cache + 3 * vec + count        # h + h_bar + h_sum + accum
+    if a == "ca2fl_direct":
         return cache + 2 * vec + count        # h + h_bar + accum + count
     if a == "fedbuff":
         return vec + count

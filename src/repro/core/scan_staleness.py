@@ -503,8 +503,6 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
     marks = (eval_marks_for(T, eval_every or T)
              if eval_fn is not None else None)
     L, ns = len(lrs), len(seeds)
-    tile = lambda a: jnp.concatenate([a] * L, 0)
-    lr_vec = jnp.repeat(jnp.asarray(lrs, jnp.float32), ns)
     if runner is None:
         runner = _make_runner(
             mesh, grad_fn=grad_fn, params0=params0, aggregator=aggregator,
@@ -512,8 +510,18 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
             init_cache_grads=init_cache_grads)
-    ws, _, outs, extras = jax.vmap(runner)(*tuple(tile(a) for a in batch),
-                                           lr_vec)
+    # nested vmap: the lr axis broadcasts the per-seed randomness
+    # (in_axes=None) instead of host-materialising L copies of the
+    # (ns, n_events, n) gumbel stack — the (n_events, n) rows are stored
+    # once per seed, not once per (lr, seed) grid cell
+    grid_run = jax.vmap(jax.vmap(runner, in_axes=(0, 0, 0, 0, 0, None)),
+                        in_axes=(None, None, None, None, None, 0))
+    ws, _, outs, extras = grid_run(*batch, jnp.asarray(lrs, jnp.float32))
+    # flatten (L, ns, ...) -> (L*ns, ...): cell i*ns+j is (lr i, seed j)
+    flat2 = lambda x: x.reshape((L * ns,) + x.shape[2:])
+    ws = flat2(ws)
+    outs = jax.tree.map(flat2, outs)
+    extras = jax.tree.map(flat2, extras)
     wants_init = init_cache_grads and wants_cache_init(aggregator)
     flat = _staleness_results(ws, outs, extras, L * ns, T,
                               n_clients if wants_init else 0,

@@ -21,6 +21,7 @@ from repro.kernels import cache_update as _cu
 from repro.kernels import masked_agg as _ma
 from repro.kernels import quant as _q
 from repro.kernels import ref
+from repro.kernels import row_delta as _rd
 
 
 def default_backend() -> str:
@@ -38,6 +39,14 @@ def cache_row_update(u, g, c_row, old_scale, new_scale, inv_n, backend=None):
         return ref.cache_row_update_ref(u, g, c_row, old_scale, new_scale, inv_n)
     return _cu.cache_row_update(u, g, c_row, old_scale, new_scale, inv_n,
                                 interpret=_interpret(backend))
+
+
+def row_delta(g, c_row, old_scale, new_scale, backend=None):
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.row_delta_ref(g, c_row, old_scale, new_scale)
+    return _rd.row_delta(g, c_row, old_scale, new_scale,
+                         interpret=_interpret(backend))
 
 
 def masked_agg(cache, scales, mask, backend=None):

@@ -6,6 +6,9 @@ Semantics (all f32 accumulation):
         c_row' = clip(round(g / new_scale))  (int8)
   * masked_agg: ACED bounded-delay aggregation over the whole cache
         u = Σ_i m_i·(C[i]·s_i) / max(Σ_i m_i, 1)
+  * row_delta: fused cache-row swap for the incremental running-sum rules
+        delta  = dq(q(g)) − dq(c_row)     (what a running sum gains)
+        c_row' = q(g)                     (int8)
   * quantize_rows / dequantize_rows: symmetric per-row int8.
 """
 from __future__ import annotations
@@ -29,6 +32,20 @@ def cache_row_update_ref(u, g, c_row, old_scale, new_scale, inv_n):
     q = jnp.clip(jnp.round(g / new_scale), -127, 127)
     u_new = u + (q * new_scale - old) * inv_n
     return u_new, q.astype(jnp.int8)
+
+
+def row_delta_ref(g, c_row, old_scale, new_scale):
+    """g (d,) f32; c_row (d,) int8; scalars old_scale,new_scale
+    -> (delta (d,) f32, c_row' (d,) int8).
+
+    ``delta`` is the exact change a running sum of dequantized rows sees when
+    row j is overwritten: dq(new) − dq(old). The incremental ACED/CA²FL rules
+    add it to their O(d) running state instead of re-reducing the (n, d)
+    cache, and subtract exactly ``dq(c_row')`` when the row later expires —
+    the ACE-incremental invariant (paper Alg. a.5) under F.3.3 compression."""
+    old = c_row.astype(jnp.float32) * old_scale
+    q = jnp.clip(jnp.round(g / new_scale), -127, 127)
+    return q * new_scale - old, q.astype(jnp.int8)
 
 
 def masked_agg_ref(cache, scales, mask):

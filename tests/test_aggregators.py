@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, Arrival,
-                                    CA2FL, DelayAdaptiveASGD, FedBuff,
+from repro.core.aggregators import (ACED, ACEDDirect, ACEDirect,
+                                    ACEIncremental, Arrival, CA2FL,
+                                    CA2FLDirect, DelayAdaptiveASGD, FedBuff,
                                     VanillaASGD)
 from repro.core.mse import decompose, expected_update_ace
 
@@ -78,6 +79,129 @@ def test_ca2fl_calibration_identity():
         # u from the flush must equal h_bar_prev + accum/M
         np.testing.assert_allclose(np.asarray(u), h_bar_prev + accum / M,
                                    rtol=1e-5, atol=1e-6)
+
+
+def _drive_pair(inc, dr, events, n, d, init):
+    """Run an incremental/direct rule pair through the same (client, t)
+    sequence; every emitted update must agree ≤1e-5."""
+    s1, s2 = inc.init_state(n, d, init), dr.init_state(n, d, init)
+    rng = np.random.default_rng(7)
+    for j, t in events:
+        g = jnp.asarray(rng.normal(size=d), jnp.float32)
+        arr = Arrival(j, g, t, 1)
+        s1, u1, e1, _ = inc.step(s1, arr)
+        s2, u2, e2, _ = dr.step(s2, arr)
+        assert bool(e1) == bool(e2)
+        if bool(e1):
+            np.testing.assert_allclose(np.asarray(u1), np.asarray(u2),
+                                       rtol=1e-5, atol=1e-5)
+    return s1, s2
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+def test_aced_incremental_matches_direct(dtype):
+    """The O(d) running active-set sum must equal the direct masked cache
+    mean for arbitrary arrival sequences, including freeze-style t jumps."""
+    rng = np.random.default_rng(0)
+    n, d, tau = 6, 23, 4
+    init = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    events, t = [], 1
+    for _ in range(70):
+        events.append((int(rng.integers(n)), t))
+        t += 1 if rng.random() < 0.85 else int(rng.integers(2, 11))
+    _drive_pair(ACED(tau_algo=tau, cache_dtype=dtype),
+                ACEDDirect(tau_algo=tau, cache_dtype=dtype),
+                events, n, d, init)
+
+
+def test_aced_init_batch_simultaneous_expiry():
+    """Regression for the init-batch correctness trap: all n clients share
+    t_start = 1, so they all leave the active set at once at t = τ_algo + 2
+    — the one step the owner-ring cannot carry and the cohort-sum correction
+    must. Only client 0 keeps arriving; at t = τ+2 the update must collapse
+    to the mean over client 0's recent rows alone."""
+    n, d, tau = 5, 8, 3
+    rng = np.random.default_rng(1)
+    init = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    inc, dr = ACED(tau_algo=tau), ACEDDirect(tau_algo=tau)
+    events = [(0, t) for t in range(1, tau + 6)]   # crosses t = tau+2
+    s1, s2 = _drive_pair(inc, dr, events, n, d, init)
+    # after crossing, only client 0 is active in both implementations
+    t_last = events[-1][1]
+    active = (t_last - np.asarray(s2["t_start"])) <= tau
+    assert active.tolist() == [True] + [False] * (n - 1)
+    assert int(s1["count"]) == 1
+    assert int(s1["init_count"]) == 0              # cohort fully corrected
+    np.testing.assert_allclose(np.asarray(s1["asum"]),
+                               np.asarray(s1["cache"].row(0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_aced_init_expiry_under_thaw_jump():
+    """A freeze fast-forward that leaps straight past t = τ_algo + 2 must
+    still fire the init-cohort correction (and the ring sweep must retire
+    every stale owner in one event)."""
+    n, d, tau = 5, 8, 3
+    rng = np.random.default_rng(2)
+    init = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    events = [(1, 1), (2, 2), (0, 2 * tau + 9)]    # jump >> tau+2
+    s1, _ = _drive_pair(ACED(tau_algo=tau), ACEDDirect(tau_algo=tau),
+                        events, n, d, init)
+    assert int(s1["count"]) == 1                   # only the thaw arrival
+    assert int(s1["init_count"]) == 0
+
+
+def test_aced_rearrival_disowns_slot():
+    """Re-arrival before expiry must disown the client's previous ring slot:
+    a stale entry would survive one full ring revolution and subtract the
+    client's row a second time when the old residue is next swept (t_start
+    checks alone cannot catch it — by then the client has genuinely
+    expired). Drive client 1 past t = v + P + τ + 1 and compare to direct."""
+    n, d, tau = 4, 6, 2                            # P = 4: short revolution
+    rng = np.random.default_rng(3)
+    init = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    # client 1 arrives at t=2 (slot 3), re-arrives at t=4 (disowns slot 3),
+    # then client 0 arrivals walk t past 3 + P + tau + 1 = 10
+    events = [(1, 1), (1, 2), (0, 3), (1, 4)] + [(0, t) for t in range(5, 14)]
+    s1, s2 = _drive_pair(ACED(tau_algo=tau), ACEDDirect(tau_algo=tau),
+                         events, n, d, init)
+    active = (13 - np.asarray(s2["t_start"])) <= tau
+    assert int(s1["count"]) == int(active.sum())
+
+
+def test_ca2fl_lazy_matches_direct():
+    """The lazy h_sum calibration mean must match the literal per-arrival
+    cache_mean(h) re-reduction at every flush, f32 and int8."""
+    rng = np.random.default_rng(4)
+    n, d, M = 5, 16, 3
+    for dtype in ("float32", "int8"):
+        inc = CA2FL(buffer_size=M, cache_dtype=dtype)
+        dr = CA2FLDirect(buffer_size=M, cache_dtype=dtype)
+        s1, s2 = inc.init_state(n, d, None), dr.init_state(n, d, None)
+        for t in range(30):
+            j = int(rng.integers(n))
+            g = jnp.asarray(rng.normal(size=d) * 3, jnp.float32)
+            arr = Arrival(j, g, t, 0)
+            s1, u1, e1, _ = inc.step(s1, arr)
+            s2, u2, e2, _ = dr.step(s2, arr)
+            assert bool(e1) == bool(e2)
+            if bool(e1):
+                np.testing.assert_allclose(np.asarray(u1), np.asarray(u2),
+                                           rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s1["h_bar"]),
+                                   np.asarray(s2["h_bar"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_buffered_rules_emit_zero_update_between_flushes():
+    """The emit-gated reciprocal: non-flushing arrivals must do no update
+    arithmetic — FedBuff's buffered 'update' is exactly 0 (zeroed scalar
+    gate), not a live O(d) division of the accumulator."""
+    agg = FedBuff(buffer_size=3)
+    s = agg.init_state(4, 8)
+    s, u, emit, _ = agg.step(s, Arrival(0, jnp.ones(8), 0, 0))
+    assert not bool(emit)
+    np.testing.assert_array_equal(np.asarray(u), np.zeros(8))
 
 
 def test_aced_active_set_and_rejoin():

@@ -116,11 +116,13 @@ def test_afl_state_bytes_table():
     assert afl_state_bytes(asgd, params) == 0
 
 
-_DTYPED = ("ace", "ace_direct", "aced", "ca2fl")
+_DTYPED = ("ace", "ace_direct", "aced", "aced_direct", "ca2fl",
+           "ca2fl_direct")
 
 
 @pytest.mark.parametrize("algo", ["asgd", "delay_asgd", "fedbuff", "ca2fl",
-                                  "ace", "ace_direct", "aced"])
+                                  "ca2fl_direct", "ace", "ace_direct", "aced",
+                                  "aced_direct"])
 @pytest.mark.parametrize("cache_dtype", ["float32", "bfloat16", "int8"])
 def test_afl_state_bytes_matches_flat_allocation(algo, cache_dtype):
     """The analytic count must equal byte-for-byte what Aggregator.init_state
@@ -140,7 +142,8 @@ def test_afl_state_bytes_matches_flat_allocation(algo, cache_dtype):
 
 
 @pytest.mark.parametrize("algo", ["asgd", "delay_asgd", "fedbuff", "ca2fl",
-                                  "ace", "ace_direct", "aced"])
+                                  "ca2fl_direct", "ace", "ace_direct", "aced",
+                                  "aced_direct"])
 @pytest.mark.parametrize("cache_dtype", ["float32", "int8"])
 @pytest.mark.parametrize("state_dtype", ["float32", "bfloat16"])
 def test_afl_state_bytes_matches_tree_allocation(algo, cache_dtype,

@@ -9,6 +9,7 @@ from repro.kernels import ops, ref
 from repro.kernels.cache_update import cache_row_update
 from repro.kernels.masked_agg import masked_agg
 from repro.kernels.quant import dequantize_rows, quantize_rows
+from repro.kernels.row_delta import row_delta
 
 
 @pytest.mark.parametrize("n,d", [(2, 128), (8, 1000), (16, 4096), (3, 2049),
@@ -56,6 +57,27 @@ def test_cache_row_update_matches_ref(d, blk):
     np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
                                rtol=1e-5, atol=1e-5)
     assert jnp.array_equal(b1, b2)
+
+
+@pytest.mark.parametrize("d,blk", [(512, 128), (4096, 2048), (1000, 512),
+                                   (129, 128)])
+def test_row_delta_matches_ref(d, blk):
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=d) * 5, jnp.float32)
+    crow_f = jnp.asarray(rng.normal(size=d), jnp.float32)
+    q, s = ref.quantize_rows_ref(crow_f[None])
+    crow, osc = q[0], s[0]
+    nsc = ref.row_scale(g)
+    d1, q1 = row_delta(g, crow, osc, nsc, interpret=True, block_d=blk)
+    d2, q2 = ref.row_delta_ref(g, crow, osc, nsc)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-5)
+    assert jnp.array_equal(q1, q2)
+    # the swap invariant: delta == dq(new) − dq(old) exactly
+    np.testing.assert_allclose(
+        np.asarray(d2),
+        np.asarray(q2.astype(jnp.float32) * nsc - crow.astype(jnp.float32)
+                   * osc), rtol=1e-6, atol=1e-6)
 
 
 def test_ops_dispatch_xla_equals_interpret():

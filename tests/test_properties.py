@@ -162,6 +162,98 @@ def test_apply_server_rule_equals_unified_step(algo, n, M, steps, seed):
 
 
 @settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 4),
+       st.sampled_from(["float32", "int8"]),
+       st.lists(st.tuples(st.integers(0, 9), st.integers(0, 8)),
+                min_size=1, max_size=40),
+       st.integers(0, 10**6))
+def test_aced_incremental_active_sum_matches_direct(n, tau, dtype, steps,
+                                                    seed):
+    """incremental-ACED running active sum == direct masked ``cache_mean``
+    over random arrival/expiry/re-join sequences (flat layout, f32 + int8):
+    every emitted update agrees ≤1e-5, and after the sequence the carried
+    count equals the direct rule's active-set size — pinning the owner-ring
+    expiry sweep, the init-cohort correction and re-arrival disowning under
+    arbitrary t advances (including freeze-thaw jumps)."""
+    from repro.core.aggregators import ACED, ACEDDirect, Arrival
+
+    rng = np.random.default_rng(seed)
+    d = 12
+    init = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    inc = ACED(tau_algo=tau, cache_dtype=dtype)
+    dr = ACEDDirect(tau_algo=tau, cache_dtype=dtype)
+    s1, s2 = inc.init_state(n, d, init), dr.init_state(n, d, init)
+    t, t_last = 1, 1
+    for c, jump in steps:
+        g = jnp.asarray(rng.normal(size=d), jnp.float32)
+        arr = Arrival(c % n, g, t, 1)
+        s1, u1, e1, _ = inc.step(s1, arr)
+        s2, u2, e2, _ = dr.step(s2, arr)
+        assert bool(e1) == bool(e2)
+        np.testing.assert_allclose(np.asarray(u1), np.asarray(u2),
+                                   rtol=1e-5, atol=1e-5)
+        t_last = t
+        t += 1 + (jump if jump > 5 else 0)      # mostly +1; sometimes a thaw
+    # count reflects the active set at the last *processed* arrival time
+    active = (t_last - np.asarray(s2["t_start"])) <= tau
+    assert int(s1["count"]) == int(active.sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 3),
+       st.sampled_from(["float32", "int8"]),
+       st.integers(3, 12), st.integers(0, 10**6))
+def test_aced_incremental_matches_direct_tree_layout(n, tau, dtype, steps,
+                                                     seed):
+    """Same property on the tree-cache layout (pjit path): `aced` vs
+    `aced_direct` through `apply_server_rule` on pytree gradients — the
+    running-sum state must be layout-generic, not a FlatCache special."""
+    import jax
+
+    from repro.configs.base import AFLConfig
+    from repro.core.distributed import apply_server_rule, init_afl_state
+
+    rng = np.random.default_rng(seed)
+    grads_like = {"a": jnp.zeros((3, 4)), "b": jnp.zeros(5)}
+    kw = dict(n_clients=n, tau_algo=tau, cache_dtype=dtype)
+    cfg_i = AFLConfig(algorithm="aced", **kw)
+    cfg_d = AFLConfig(algorithm="aced_direct", **kw)
+    s1, s2 = init_afl_state(cfg_i, grads_like), init_afl_state(cfg_d,
+                                                               grads_like)
+    for t in range(steps):
+        j = int(rng.integers(n))
+        g = jax.tree.map(
+            lambda x: jnp.asarray(rng.normal(size=x.shape), jnp.float32),
+            grads_like)
+        s1, u1, _ = apply_server_rule(cfg_i, s1, g, jnp.int32(j),
+                                      jnp.int32(t), jnp.int32(1))
+        s2, u2, _ = apply_server_rule(cfg_d, s2, g, jnp.int32(j),
+                                      jnp.int32(t), jnp.int32(1))
+        for a, b in zip(jax.tree.leaves(u1), jax.tree.leaves(u2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(8, 200), st.floats(0.05, 20.0),
+       st.integers(0, 10**6))
+def test_row_delta_is_exact_swap(n, d, scale, seed):
+    """row_delta's delta == dq(new row) − dq(old row) exactly: a running sum
+    that adds delta and later subtracts dq(new row) returns to its previous
+    value to fp rounding (the incremental-rule invariant)."""
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(n, d)) * scale, jnp.float32)
+    q, s = ref.quantize_rows_ref(rows)
+    g = jnp.asarray(rng.normal(size=d) * scale, jnp.float32)
+    nsc = ref.row_scale(g)
+    delta, q_new = ref.row_delta_ref(g, q[0], s[0], nsc)
+    old = ref.dequantize_rows_ref(q[:1], s[:1])[0]
+    new = q_new.astype(jnp.float32) * nsc
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(new - old),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
 @given(st.integers(2, 8), st.integers(8, 128), st.integers(0, 10**6))
 def test_cache_update_invariant(n, d, seed):
     """After any update sequence, u == mean(dq(cache)) exactly (Alg. a.5)."""

@@ -1,7 +1,8 @@
 """Sharded staleness scan (repro/core/scan_sharded.py): differential
 equivalence on a forced 8-device host mesh.
 
-Three-way contract, pinned for all five algorithms: the **sharded** scan
+Three-way contract, pinned for the whole zoo (all five production
+algorithms plus the O(n·d) direct references): the **sharded** scan
 (cache rows over ``data``, features over ``model``), the **unsharded** scan
 and the **host** `StalenessSimulator` replay consume the identical random
 stream, so trajectories must agree to ≤1e-5 — including permanent dropout,
@@ -14,8 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregators import (ACED, ACEIncremental, CA2FL, FedBuff,
-                                    VanillaASGD)
+from repro.core.aggregators import (ACED, ACEDDirect, ACEIncremental, CA2FL,
+                                    CA2FLDirect, FedBuff, VanillaASGD)
 from repro.core.scan_engine import default_n_events
 from repro.core.scan_sharded import (make_sharded_staleness_runner,
                                      staleness_mesh)
@@ -31,8 +32,10 @@ AGGS = {
     "asgd": lambda: VanillaASGD(),
     "fedbuff": lambda: FedBuff(buffer_size=4),
     "ca2fl": lambda: CA2FL(buffer_size=4),
+    "ca2fl_direct": lambda: CA2FLDirect(buffer_size=4),
     "ace": lambda: ACEIncremental(),
     "aced": lambda: ACED(tau_algo=5),
+    "aced_direct": lambda: ACEDDirect(tau_algo=5),
 }
 
 
@@ -140,13 +143,43 @@ def test_sharded_scan_windows_freeze_thaw(algo, device_mesh):
 @pytest.mark.parametrize("algo,factory", [
     ("ace", lambda: ACEIncremental(cache_dtype="int8")),
     ("aced", lambda: ACED(tau_algo=5, cache_dtype="int8")),
+    ("aced_direct", lambda: ACEDDirect(tau_algo=5, cache_dtype="int8")),
     ("ca2fl", lambda: CA2FL(buffer_size=4, cache_dtype="int8")),
+    ("ca2fl_direct", lambda: CA2FLDirect(buffer_size=4, cache_dtype="int8")),
 ])
 def test_sharded_scan_int8_cache(algo, factory, device_mesh):
     """int8 caches: quantize/dequantize must commute with the (clients →
     data, features → model) cache sharding."""
     sim, hr, sr, shr = _three_way(factory, device_mesh, T=30)
     _assert_matches(sr, shr, host=hr)
+
+
+@pytest.mark.parametrize("inc,dr", [
+    (lambda dt: ACED(tau_algo=5, cache_dtype=dt),
+     lambda dt: ACEDDirect(tau_algo=5, cache_dtype=dt)),
+    (lambda dt: CA2FL(buffer_size=4, cache_dtype=dt),
+     lambda dt: CA2FLDirect(buffer_size=4, cache_dtype=dt)),
+], ids=["aced", "ca2fl"])
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+def test_sharded_incremental_matches_direct(inc, dr, dtype, device_mesh):
+    """The O(d) running-sum state (asum/h_sum, sharded over ``model`` via
+    the cache_d constraint) must reproduce the direct O(n·d) re-reduction's
+    trajectory on the mesh — including a freeze/thaw window, where the thaw
+    jump retires several ring slots in one sharded sweep."""
+    n, T = 8, 50
+    leave = np.full(n, 12, np.int64)
+    rejoin = np.full(n, 22, np.int64)
+    rejoin[3] = 30
+    grad_fn = quad_grad_fn(n, 6)
+    kw = dict(grad_fn=grad_fn, params0=jnp.zeros(6), n_clients=n,
+              server_lr=0.05, T=T, beta=2.0, windows=(leave, rejoin),
+              seed=0, mesh=device_mesh)
+    ri = run_staleness_scan(aggregator=inc(dtype), **kw)
+    rd = run_staleness_scan(aggregator=dr(dtype), **kw)
+    assert ri.ts.tolist() == rd.ts.tolist()
+    np.testing.assert_allclose(ri.w, rd.w, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ri.update_norms, rd.update_norms,
+                               rtol=1e-4, atol=1e-5)
 
 
 def test_sharded_scan_nondividing_shapes(device_mesh):

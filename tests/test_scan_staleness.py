@@ -10,8 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregators import (ACED, ACEIncremental, CA2FL, FedBuff,
-                                    VanillaASGD)
+from repro.core.aggregators import (ACED, ACEDDirect, ACEDirect,
+                                    ACEIncremental, CA2FL, CA2FLDirect,
+                                    FedBuff, VanillaASGD)
 from repro.core.scan_engine import default_n_events
 from repro.core.scan_staleness import (NEVER, build_staleness_randomness,
                                        eval_marks_for, make_staleness_runner,
@@ -221,6 +222,82 @@ def test_eval_marks_for_cadence():
     assert eval_marks_for(40, 10) == (10, 20, 30, 40)
     assert eval_marks_for(5, 100) == (5,)
     assert eval_marks_for(40, None) is None
+
+
+# ---------------------------------------------------------------------------
+# Incremental O(d) rules vs their pinned O(n·d) direct references, at the
+# scan level (the other two zoo members, asgd/fedbuff, have no cache to
+# re-reduce; their host/scan equivalence is pinned above)
+# ---------------------------------------------------------------------------
+
+_PAIRS = {
+    "ace": (lambda dt: ACEIncremental(cache_dtype=dt),
+            lambda dt: ACEDirect(cache_dtype=dt)),
+    "aced": (lambda dt: ACED(tau_algo=5, cache_dtype=dt),
+             lambda dt: ACEDDirect(tau_algo=5, cache_dtype=dt)),
+    "ca2fl": (lambda dt: CA2FL(buffer_size=4, cache_dtype=dt),
+              lambda dt: CA2FLDirect(buffer_size=4, cache_dtype=dt)),
+}
+
+_DIFF_SCENARIOS = {
+    "dropout": ("float32", dict(n=10, T=60, dropout_frac=0.5, dropout_at=30)),
+    "rejoin": ("float32", dict(n=10, T=60, dropout_frac=0.5, dropout_at=20,
+                               rejoin_at=40)),
+    "freeze_thaw": ("float32", "windows"),
+    "int8": ("int8", {}),
+}
+
+
+def _diff_incremental_vs_direct(pair, scenario):
+    """scan(incremental) == scan(direct) == host-replay(direct), one random
+    stream. Both rules emit identically, so the trajectories are comparable
+    event-for-event; any O(d)-state drift from the masked/whole-cache
+    re-reduction shows up here."""
+    dtype, kw = _DIFF_SCENARIOS[scenario]
+    inc_f, dir_f = _PAIRS[pair]
+    n, T, beta, seed = 8, 40, 2.0, 0
+    if kw == "windows":
+        leave = np.full(n, 12, np.int64)
+        rejoin = np.full(n, 22, np.int64)
+        rejoin[3] = 30
+        kw = dict(n=n, T=50, windows=(leave, rejoin))
+    n = kw.get("n", n)
+    T = kw.get("T", T)
+    grad_fn = quad_grad_fn(n, 6)
+    n_events = default_n_events(dir_f(dtype), T)
+    if kw.get("rejoin_at") is not None or kw.get("windows") is not None:
+        n_events += n
+    rand = build_staleness_randomness(
+        seed, n_events, n, beta, kw.get("dropout_frac", 0.0), 0.0,
+        dropout_at=kw.get("dropout_at"), rejoin_at=kw.get("rejoin_at"),
+        windows=kw.get("windows"))
+    run_kw = dict(grad_fn=grad_fn, params0=jnp.zeros(6), n_clients=n,
+                  server_lr=0.05, T=T, beta=beta, seed=seed,
+                  dropout_frac=kw.get("dropout_frac", 0.0),
+                  dropout_at=kw.get("dropout_at"),
+                  rejoin_at=kw.get("rejoin_at"), windows=kw.get("windows"))
+    sr_inc = run_staleness_scan(aggregator=inc_f(dtype), **run_kw)
+    sr_dir = run_staleness_scan(aggregator=dir_f(dtype), **run_kw)
+    sim = StalenessSimulator(
+        grad_fn=grad_fn, params0=jnp.zeros(6), aggregator=dir_f(dtype),
+        n_clients=n, server_lr=0.05, beta=beta,
+        dropout_frac=kw.get("dropout_frac", 0.0),
+        dropout_at=kw.get("dropout_at"), rejoin_at=kw.get("rejoin_at"),
+        windows=kw.get("windows"), seed=seed, replay=rand)
+    hr_dir = sim.run(T)
+    assert sr_inc.ts.tolist() == sr_dir.ts.tolist() == hr_dir.ts
+    assert np.max(np.abs(sr_inc.w - sr_dir.w)) <= 1e-5
+    assert np.max(np.abs(sr_dir.w - np.asarray(sim.w))) <= 1e-5
+    np.testing.assert_allclose(sr_inc.update_norms, sr_dir.update_norms,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sr_inc.losses, sr_dir.losses,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("scenario", sorted(_DIFF_SCENARIOS))
+@pytest.mark.parametrize("pair", sorted(_PAIRS))
+def test_incremental_rule_matches_direct_scan(pair, scenario):
+    _diff_incremental_vs_direct(pair, scenario)
 
 
 def test_aced_event_budget_survives_heavy_dropout():

@@ -284,12 +284,74 @@ def _rule_rows(fast=True):
     return rows
 
 
+def _train_scan_rows(fast=True):
+    """Real-model scanned train path (ISSUE 6): the tree-layout staleness
+    scan driving a reduced yi transformer (repro.models pjit grads, tree
+    caches, tree history ring) vs the pinned host replay loop — the
+    `launch/train.py` workload. Throughput is events/sec (arrival events
+    through the server loop, the train driver's unit — NOT µs/iter); the
+    ≤1e-5 host deviation is a hard gate."""
+    from jax.flatten_util import ravel_pytree
+
+    from repro.configs.registry import get_config
+    from repro.core.fl_tasks import make_lm_task
+
+    n, T, beta, seed = 4, 30 if fast else 120, 3.0, 0
+    cfg = get_config("yi-9b").reduced(layers=2, d_model=64, vocab=128)
+    task = make_lm_task(cfg=cfg, n_clients=n, batch=2, seq=32, seed=seed)
+    lr = 0.5 * float(np.sqrt(n / T))
+    agg = ACEIncremental()
+    n_events = default_n_events(agg, T)
+    rand = build_staleness_randomness(seed, n_events, n, beta)
+
+    sim = StalenessSimulator(grad_fn=task.grad_fn, params0=task.params0,
+                             aggregator=ACEIncremental(), n_clients=n,
+                             server_lr=lr, beta=beta, seed=seed, replay=rand)
+    t0 = time.time()
+    sim.run(T)
+    host_s = time.time() - t0
+
+    runner = make_staleness_runner(grad_fn=task.grad_fn, params0=task.params0,
+                                   aggregator=ACEIncremental(), n_clients=n,
+                                   T=T, beta=beta, layout="tree")
+    args = (jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
+            rand.leave_at, rand.rejoin_at, jnp.float32(lr))
+    t0 = time.time()
+    jax.block_until_ready(runner(*args))
+    compile_s = time.time() - t0
+    t0 = time.time()
+    w, _, _, _ = runner(*args)
+    jax.block_until_ready(jax.tree.leaves(w))
+    scan_s = time.time() - t0
+    dev = float(np.max(np.abs(np.asarray(ravel_pytree(w)[0])
+                              - np.asarray(sim.w, np.float32))))
+    ev_s = n_events / max(scan_s, 1e-9)
+    speedup = host_s / max(scan_s, 1e-9)
+    rows = [
+        {"bench": "scan_bench", "algo": "train_scan_host_loop",
+         "events_per_sec": n_events / max(host_s, 1e-9), "wall_s": host_s,
+         "derived": f"wall={host_s:.2f}s"},
+        {"bench": "scan_bench", "algo": "train_scan",
+         "events_per_sec": ev_s, "wall_s": scan_s, "compile_s": compile_s,
+         "speedup_vs_host": speedup, "max_dev_vs_host": dev,
+         "params": int(cfg.param_count()), "n_clients": n,
+         "derived": f"{ev_s:.1f}ev/s_dev={dev:.1e}"},
+    ]
+    if dev > 1e-5:
+        raise AssertionError(
+            f"tree-layout train scan deviates from host replay: "
+            f"{dev:.2e} > 1e-5")
+    return rows
+
+
 def main(fast=True, write_json=True):
-    rows = _event_rows(fast) + _staleness_rows(fast) + _rule_rows(fast)
+    rows = (_event_rows(fast) + _staleness_rows(fast) + _rule_rows(fast)
+            + _train_scan_rows(fast))
     if write_json:
         payload = {"workloads": {
             "event": "100-client x 500-iter ACE quadratic",
-            "staleness": "50-client x 400-iter ACE vision"},
+            "staleness": "50-client x 400-iter ACE vision",
+            "train_scan": "4-client x 30-iter reduced-yi LM (tree layout)"},
             "fast": fast, "backend": jax.default_backend(), "rows": rows}
         with open(BENCH_JSON, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)

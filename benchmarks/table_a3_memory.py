@@ -15,7 +15,50 @@ from repro.configs.base import AFLConfig
 from repro.core.aggregators import (ACED, ACEDDirect, ACEDirect,
                                     ACEIncremental, CA2FL, CA2FLDirect,
                                     DelayAdaptiveASGD, FedBuff, VanillaASGD)
-from repro.core.distributed import afl_state_bytes, init_afl_state
+from repro.core.distributed import (afl_state_bytes, history_ring_bytes,
+                                    init_afl_state)
+
+
+def _ring_rows():
+    """Model-history ring of the scanned train path (ISSUE 6): the
+    (tau_max+1, ·) tree buffer `scan_staleness._staleness_program` carries,
+    f32 vs the opt-in int8 layout. One tiny reduced-yi config is
+    allocation-pinned (init_tree_cache must match `history_ring_bytes`
+    byte-for-byte, like the aggregator states above); the default reduced
+    and ~100M-param yi configs are analytic-only via `jax.eval_shape` (no
+    100M allocation in a benchmark)."""
+    from repro.configs.registry import get_config
+    from repro.core.cache import init_tree_cache, tree_cache_nbytes
+    from repro.core.staleness_sim import default_tau_max
+    from repro.models import build_model
+
+    tau_max = default_tau_max(5.0)           # launch/train.py default beta
+    S = tau_max + 1
+    rows = []
+    sizes = [("ring_tiny", dict(layers=2, d_model=64, vocab=128), True),
+             ("ring_reduced", dict(layers=4, d_model=256, vocab=512), False),
+             ("ring_100m", dict(layers=8, d_model=1024, vocab=4096), False)]
+    for name, size, allocate in sizes:
+        cfg = get_config("yi-9b").reduced(**size)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        d = sum(int(x.size) for x in jax.tree.leaves(params))
+        for hdt in ("float32", "int8"):
+            analytic = history_ring_bytes(params, tau_max, hdt)
+            if allocate:
+                real = model.init(jax.random.PRNGKey(0))
+                measured = tree_cache_nbytes(init_tree_cache(S, real, hdt))
+                if measured != analytic:
+                    raise AssertionError(
+                        f"{name}/{hdt}: history_ring_bytes drifted from "
+                        f"allocation ({analytic} vs {measured})")
+            rows.append({"bench": "table_a3_memory",
+                         "algo": f"{name}_{hdt}",
+                         "analytic_bytes": int(analytic),
+                         "params": d, "tau_max": tau_max,
+                         "bytes_per_param": round(analytic / d, 3),
+                         "allocation_pinned": allocate})
+    return rows
 
 
 def main(fast=True):
@@ -58,6 +101,7 @@ def main(fast=True):
                      "analytic_bytes": int(analytic),
                      "tree_bytes": int(tree_measured),
                      "bytes_per_param": round(measured / d, 3)})
+    rows += _ring_rows()
     return rows
 
 

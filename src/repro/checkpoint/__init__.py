@@ -1,2 +1,4 @@
 from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
-                                         save_checkpoint)
+                                         restore_train_checkpoint,
+                                         save_checkpoint,
+                                         save_train_checkpoint)

@@ -62,3 +62,34 @@ def restore_checkpoint(directory: str, step: int, target: Any, *,
         assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape, np.shape(leaf))
         new_leaves.append(arr.astype(np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+# ---------------------------------------------------------------------------
+# Scanned-train checkpoints: the chunked runner's carry is one pytree that
+# IS the full protocol state — model, aggregator cache + running sums +
+# owner-ring, model-history ring, PRNG key, eval snapshots — so persisting
+# it closes the old resume blind spot where only params/opt state survived
+# and the server rule silently reset.
+# ---------------------------------------------------------------------------
+
+_TRAIN_PREFIX = "afl"
+
+
+def save_train_checkpoint(directory: str, event: int, carry: Any, *,
+                          keep: int = 3) -> str:
+    """Persist the chunked scan carry at event-stream position `event`
+    (a chunk boundary in launch/train.py)."""
+    return save_checkpoint(directory, event, {"carry": carry},
+                           prefix=_TRAIN_PREFIX, keep=keep)
+
+
+def restore_train_checkpoint(directory: str, carry_template: Any):
+    """-> (carry, event) from the newest train checkpoint, or
+    ``(carry_template, 0)`` when none exists. `carry_template` is a freshly
+    built carry (shape/dtype donor) — e.g. ``runner.init(key, lr)``."""
+    last = latest_step(directory, prefix=_TRAIN_PREFIX)
+    if last is None:
+        return carry_template, 0
+    payload = restore_checkpoint(directory, last, {"carry": carry_template},
+                                 prefix=_TRAIN_PREFIX)
+    return payload["carry"], last

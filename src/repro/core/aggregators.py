@@ -68,8 +68,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cache import (FlatCache, cache_mean, cache_n, cache_row,
-                              cache_set_row, cache_set_row_delta,
-                              init_flat_cache)
+                              cache_set_row, cache_set_row_delta, cache_sum,
+                              init_flat_cache, init_tree_cache)
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
 from repro.sharding.rules import shard
@@ -130,6 +130,39 @@ def _shard_vec(vec, cache):
     return vec
 
 
+# --- layout-generic init_state plumbing ------------------------------------
+# `init_state` takes `d` either as the raveled dimension (int — flat layout:
+# host simulators, scan engines) or as a gradient pytree *template* (tree
+# layout: the pjit train step and the real-model scanned path). The step
+# implementations are already layout-generic; these helpers make the initial
+# state so too, byte-for-byte matching what afl_state_bytes accounts per
+# layout (pinned by tests/test_distributed.py and benchmarks/table_a3).
+
+def _is_template(d) -> bool:
+    import numpy as _np
+    return not isinstance(d, (int, _np.integer))
+
+
+def _init_cache(n, d, dtype, init_grads):
+    if _is_template(d):
+        return init_tree_cache(n, d, dtype, init_grads)
+    return init_flat_cache(n, int(d), dtype, init_grads)
+
+
+def _zeros_vec(d, dtype="float32"):
+    dt = jnp.dtype(dtype)
+    if _is_template(d):
+        return jax.tree.map(lambda g: jnp.zeros(tuple(jnp.shape(g)), dt), d)
+    return jnp.zeros((int(d),), dt)
+
+
+def _astate(vec, dtype):
+    """Cast a running-sum vector to the rule's state dtype (identity for the
+    flat engines' f32 default)."""
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(lambda a: a.astype(dt), vec)
+
+
 class Aggregator:
     """Base: subclasses define init_state / step (pure, trace-safe)."""
     name = "base"
@@ -139,7 +172,13 @@ class Aggregator:
     #: engines budget extra events (see scan_engine.default_n_events)
     guaranteed_emit = True
 
-    def init_state(self, n: int, d: int, init_grads=None) -> Any:
+    def init_state(self, n: int, d, init_grads=None) -> Any:
+        """Initial server state. `d` is layout-generic: the raveled dimension
+        (int — flat layout; caches are `FlatCache`, running vectors (d,)
+        arrays) or a gradient pytree *template* (tree layout; caches are
+        stacked tree caches, running vectors grads-like pytrees in
+        `state_dtype`). `init_grads` matches: an (n, d) array or a grads-like
+        pytree with a leading (n,) client axis."""
         raise NotImplementedError
 
     def step(self, state, arr: Arrival):
@@ -194,10 +233,11 @@ class DelayAdaptiveASGD(Aggregator):
 @dataclasses.dataclass
 class FedBuff(Aggregator):
     buffer_size: int = 10
+    state_dtype: str = "float32"
     name = "fedbuff"
 
     def init_state(self, n, d, init_grads=None):
-        return {"accum": jnp.zeros((d,), jnp.float32),
+        return {"accum": _zeros_vec(d, self.state_dtype),
                 "count": jnp.zeros((), jnp.int32)}
 
     def step(self, state, arr):
@@ -230,14 +270,17 @@ class CA2FL(Aggregator):
     arrival re-reduces the (n, d) cache the way `CA2FLDirect` does."""
     buffer_size: int = 10
     cache_dtype: str = "float32"
+    state_dtype: str = "float32"
     name = "ca2fl"
 
     def init_state(self, n, d, init_grads=None):
-        h = init_flat_cache(n, d, self.cache_dtype, init_grads)
-        h_bar = cache_mean(h)
-        h_sum = _shard_vec(jax.tree.map(lambda m: m * n, h_bar), h)
+        h = _init_cache(n, d, self.cache_dtype, init_grads)
+        mean = cache_mean(h)
+        h_bar = _astate(mean, self.state_dtype)
+        h_sum = _shard_vec(
+            _astate(jax.tree.map(lambda m: m * n, mean), self.state_dtype), h)
         return {"h": h, "h_bar": h_bar, "h_sum": h_sum,
-                "accum": jnp.zeros((d,), jnp.float32),
+                "accum": _zeros_vec(d, self.state_dtype),
                 "count": jnp.zeros((), jnp.int32)}
 
     def step(self, state, arr):
@@ -276,12 +319,13 @@ class CA2FLDirect(Aggregator):
     the lazy `CA2FL` is differentially tested against (≤1e-5)."""
     buffer_size: int = 10
     cache_dtype: str = "float32"
+    state_dtype: str = "float32"
     name = "ca2fl_direct"
 
     def init_state(self, n, d, init_grads=None):
-        h = init_flat_cache(n, d, self.cache_dtype, init_grads)
-        return {"h": h, "h_bar": cache_mean(h),
-                "accum": jnp.zeros((d,), jnp.float32),
+        h = _init_cache(n, d, self.cache_dtype, init_grads)
+        return {"h": h, "h_bar": _astate(cache_mean(h), self.state_dtype),
+                "accum": _zeros_vec(d, self.state_dtype),
                 "count": jnp.zeros((), jnp.int32)}
 
     def step(self, state, arr):
@@ -316,7 +360,7 @@ class ACEDirect(Aggregator):
     cache_init = True
 
     def init_state(self, n, d, init_grads=None):
-        return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads)}
+        return {"cache": _init_cache(n, d, self.cache_dtype, init_grads)}
 
     def step(self, state, arr):
         cache = cache_set_row(state["cache"], arr.client, arr.payload)
@@ -333,12 +377,14 @@ class ACEIncremental(Aggregator):
     the backend-aware dispatch in repro/kernels/ops.py); tree caches take the
     generic dequantize-subtract path."""
     cache_dtype: str = "float32"
+    state_dtype: str = "float32"
     name = "ace"
     cache_init = True
 
     def init_state(self, n, d, init_grads=None):
-        cache = init_flat_cache(n, d, self.cache_dtype, init_grads)
-        return {"cache": cache, "u": cache.mean()}
+        cache = _init_cache(n, d, self.cache_dtype, init_grads)
+        return {"cache": cache,
+                "u": _astate(cache_mean(cache), self.state_dtype)}
 
     def step(self, state, arr):
         cache, u = state["cache"], state["u"]
@@ -397,6 +443,7 @@ class ACED(Aggregator):
     form survives as `ACEDDirect`, the pinned differential reference)."""
     tau_algo: int = 10
     cache_dtype: str = "float32"
+    state_dtype: str = "float32"
     name = "aced"
     cache_init = True
     #: emit = count > 0 looks data-dependent, but emission is in fact
@@ -411,8 +458,9 @@ class ACED(Aggregator):
         return self.tau_algo + 2
 
     def init_state(self, n, d, init_grads=None):
-        cache = init_flat_cache(n, d, self.cache_dtype, init_grads)
-        asum = _shard_vec(cache.dequant().sum(0), cache)   # one-time O(n·d)
+        cache = _init_cache(n, d, self.cache_dtype, init_grads)
+        # one-time O(n·d) seed of the running active-set sum
+        asum = _shard_vec(_astate(cache_sum(cache), self.state_dtype), cache)
         return {"cache": cache,
                 "t_start": jnp.ones((n,), jnp.int32),
                 "ring": jnp.full((self.ring_size,), -1, jnp.int32),
@@ -532,7 +580,7 @@ class ACEDDirect(Aggregator):
     cache_init = True
 
     def init_state(self, n, d, init_grads=None):
-        return {"cache": init_flat_cache(n, d, self.cache_dtype, init_grads),
+        return {"cache": _init_cache(n, d, self.cache_dtype, init_grads),
                 "t_start": jnp.ones((n,), jnp.int32)}
 
     def step(self, state, arr):
@@ -571,18 +619,23 @@ def make_aggregator(cfg) -> Aggregator:
     if a == "delay_asgd":
         return DelayAdaptiveASGD(tau_c=cfg.max_delay_scale * cfg.delay_beta)
     if a == "fedbuff":
-        return FedBuff(buffer_size=cfg.buffer_size)
+        return FedBuff(buffer_size=cfg.buffer_size,
+                       state_dtype=cfg.state_dtype)
     if a == "ca2fl":
-        return CA2FL(buffer_size=cfg.buffer_size, cache_dtype=cfg.cache_dtype)
+        return CA2FL(buffer_size=cfg.buffer_size, cache_dtype=cfg.cache_dtype,
+                     state_dtype=cfg.state_dtype)
     if a == "ca2fl_direct":
         return CA2FLDirect(buffer_size=cfg.buffer_size,
-                           cache_dtype=cfg.cache_dtype)
+                           cache_dtype=cfg.cache_dtype,
+                           state_dtype=cfg.state_dtype)
     if a == "ace_direct":
         return ACEDirect(cache_dtype=cfg.cache_dtype)
     if a == "ace":
-        return ACEIncremental(cache_dtype=cfg.cache_dtype)
+        return ACEIncremental(cache_dtype=cfg.cache_dtype,
+                              state_dtype=cfg.state_dtype)
     if a == "aced":
-        return ACED(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype)
+        return ACED(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype,
+                    state_dtype=cfg.state_dtype)
     if a == "aced_direct":
         return ACEDDirect(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype)
     raise ValueError(f"unknown AFL algorithm {a!r}")

@@ -152,15 +152,36 @@ def init_flat_cache(n: int, d: int, dtype: str = "float32",
 # Tree cache (distributed path): one stacked cache per param leaf.
 # ---------------------------------------------------------------------------
 
-def init_tree_cache(n: int, grads_like, dtype: str = "float32"):
+def init_tree_cache(n: int, grads_like, dtype: str = "float32",
+                    init_rows=None):
+    """Per-leaf stacked cache {q: (n, *s), scale?: (n,)} over `grads_like`.
+
+    `init_rows` (a grads-like pytree with a leading (n,) client axis — e.g.
+    the stacked init-batch gradients of a cache-init rule) seeds the rows;
+    the int8 path quantizes each row with the same per-leaf scalar scale
+    `tree_cache_set_row` uses (reduced over every axis but the client one),
+    so a seeded cache is bit-identical to n successive row writes."""
     dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": jnp.int8}[dtype]
 
     def leaf(g):
-        data = jnp.zeros((n,) + g.shape, dt)
+        data = jnp.zeros((n,) + tuple(jnp.shape(g)), dt)
         if dt == jnp.int8:
             return {"q": data, "scale": jnp.ones((n,), jnp.float32)}
         return {"q": data}
-    return jax.tree.map(leaf, grads_like)
+
+    def seeded(rows):
+        rows = rows.astype(jnp.float32)
+        if dt == jnp.int8:
+            ax = tuple(range(1, rows.ndim))
+            s = jnp.maximum(jnp.max(jnp.abs(rows), axis=ax), 1e-12) / INT8_MAX
+            q = jnp.clip(jnp.round(rows / s.reshape((-1,) + (1,) * len(ax))),
+                         -127, 127).astype(jnp.int8)
+            return {"q": q, "scale": s.astype(jnp.float32)}
+        return {"q": rows.astype(dt)}
+
+    if init_rows is None:
+        return jax.tree.map(leaf, grads_like)
+    return jax.tree.map(lambda g, rows: seeded(rows), grads_like, init_rows)
 
 
 def tree_cache_row(cache, i):
@@ -272,3 +293,18 @@ def cache_mean(cache, mask=None):
     if isinstance(cache, FlatCache):
         return cache.mean(mask)
     return tree_cache_mean(cache, mask)
+
+
+def cache_sum(cache):
+    """Σ over dequantized client rows — the one-time O(n·d) seed of the
+    incremental rules' running sums (ACED's asum/init_sum); never on a hot
+    path."""
+    if isinstance(cache, FlatCache):
+        return cache.dequant().sum(0)
+
+    def leaf(c):
+        rows = c["q"].astype(jnp.float32)
+        if c["q"].dtype == jnp.int8:
+            rows = rows * c["scale"].reshape((-1,) + (1,) * (rows.ndim - 1))
+        return jnp.sum(rows, 0)
+    return jax.tree.map(leaf, cache, is_leaf=is_tree_cache_leaf)

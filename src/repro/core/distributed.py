@@ -29,7 +29,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AFLConfig
-from repro.core import cache as cache_lib
 from repro.core.aggregators import Arrival, make_aggregator
 from repro.optim.optim import Optimizer
 
@@ -45,46 +44,17 @@ class AFLTrainState(NamedTuple):
 # Algorithm-specific server states over gradient pytrees
 # ---------------------------------------------------------------------------
 
-def init_afl_state(cfg: AFLConfig, grads_like):
-    n = cfg.n_clients
-    a = cfg.algorithm
-    sdt = jnp.dtype(cfg.state_dtype)
-    zeros = lambda: jax.tree.map(lambda g: jnp.zeros_like(g, sdt), grads_like)
-    if a == "ace":
-        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
-                "u": zeros()}
-    if a == "ace_direct":
-        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype)}
-    if a == "aced":
-        # incremental active-set state (repro/core/aggregators.ACED): the
-        # zero cache starts fully active (count = n), the owner-ring empty,
-        # and the whole fleet in the init cohort — mirrors the flat
-        # Aggregator.init_state byte-for-byte in accounting (afl_state_bytes)
-        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
-                "t_start": jnp.ones((n,), jnp.int32),
-                "ring": jnp.full((cfg.tau_algo + 2,), -1, jnp.int32),
-                "asum": zeros(),
-                "count": jnp.asarray(n, jnp.int32),
-                "t_prev": jnp.zeros((), jnp.int32),
-                "init_sum": zeros(),
-                "init_count": jnp.asarray(n, jnp.int32),
-                "init_mask": jnp.ones((n,), jnp.bool_)}
-    if a == "aced_direct":
-        return {"cache": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
-                "t_start": jnp.ones((n,), jnp.int32)}
-    if a == "fedbuff":
-        return {"accum": zeros(), "count": jnp.zeros((), jnp.int32)}
-    if a == "ca2fl":
-        return {"h": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
-                "h_bar": zeros(), "h_sum": zeros(), "accum": zeros(),
-                "count": jnp.zeros((), jnp.int32)}
-    if a == "ca2fl_direct":
-        return {"h": cache_lib.init_tree_cache(n, grads_like, cfg.cache_dtype),
-                "h_bar": zeros(), "accum": zeros(),
-                "count": jnp.zeros((), jnp.int32)}
-    if a in ("asgd", "delay_asgd"):
-        return {}
-    raise ValueError(a)
+def init_afl_state(cfg: AFLConfig, grads_like, init_grads=None):
+    """Tree-layout server state for `cfg.algorithm` over the params pytree.
+
+    Delegates to the layout-generic `Aggregator.init_state` (the same code
+    path the flat simulators and scan engines use, with `d` = the pytree
+    template instead of the raveled dimension), so the pjit path cannot
+    drift from the rule implementations. `init_grads`, when given, is a
+    grads-like pytree with a leading (n,) client axis seeding the cache of
+    cache-init rules. asgd/delay_asgd carry no state (empty tuple)."""
+    return make_aggregator(cfg).init_state(cfg.n_clients, grads_like,
+                                           init_grads)
 
 
 def apply_server_rule(cfg: AFLConfig, afl_state, grads, client, t, staleness):
@@ -191,3 +161,26 @@ def afl_state_bytes(cfg: AFLConfig, params, layout: str = "flat") -> int:
     if a == "fedbuff":
         return vec + count
     return 0
+
+
+def history_ring_bytes(params, tau_max: int,
+                       history_dtype: str = "float32",
+                       layout: str = "tree") -> int:
+    """Analytic bytes of the (tau_max+1, ·) model-history ring the scanned
+    staleness protocol carries (repro/core/scan_staleness.py) — exact:
+    matches byte-for-byte what the corresponding allocation produces
+    (allocation-pinned by tests, like `afl_state_bytes`).
+
+    layout="tree": `init_tree_cache(tau_max+1, params, history_dtype)` — a
+    per-leaf stacked (S, *shape) buffer; the int8 layout adds one (S,) f32
+    scale per leaf. layout="flat": a raw (S, d) f32 ring (the flat engines
+    never quantize their history)."""
+    S = tau_max + 1
+    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    if layout == "flat":
+        return S * d * 4
+    if layout != "tree":
+        raise ValueError(f"unknown layout {layout!r}")
+    db = {"float32": 4, "bfloat16": 2, "int8": 1}[history_dtype]
+    n_leaves = len(jax.tree.leaves(params))
+    return S * d * db + (S * 4 * n_leaves if history_dtype == "int8" else 0)

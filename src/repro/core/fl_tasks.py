@@ -157,3 +157,54 @@ def make_text_task(*, n_clients=20, alpha=1.0, batch=32, n_classes=20,
 
     return FLTask(params0, grad_fn, eval_fn, n_clients,
                   {"alpha": alpha, "kind": "text"})
+
+
+def make_lm_task(*, cfg, n_clients=8, batch=8, seq=256, n_tokens=1 << 18,
+                 seed=0) -> FLTask:
+    """Real-model LM task: a transformer from repro.models on the synthetic
+    Markov token stream, for the scanned AFL train path (launch/train.py).
+
+    Non-IID split mirrors `launch.train.client_batches`: client i samples
+    windows from its contiguous stream region (distinct local distribution
+    since the stream's hash state drifts). The whole stream lives on device
+    and windows gather inside the jitted grad, so `grad_fn` is trace-safe in
+    `client` and runs inside `lax.scan` — the same callable serves the host
+    replay reference eagerly. `eval_fn` reports LM loss on a fixed batch
+    drawn uniformly from the whole stream (all-client distribution)."""
+    from repro.data.synthetic import make_token_stream
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(seed))
+    toks = make_token_stream(n_tokens=n_tokens, vocab=cfg.vocab_size,
+                             seed=seed)
+    toks_j = jnp.asarray(toks, jnp.int32)
+    per = len(toks) // n_clients
+    if per < seq + 2:
+        raise ValueError(f"stream too short: {per} tokens/client < seq+2")
+
+    @jax.jit
+    def _grad(params, client, rng):
+        lo = client * per
+        starts = lo + jax.random.randint(rng, (batch,), 0, per - seq - 1)
+        window = toks_j[starts[:, None] + jnp.arange(seq + 1)[None, :]]
+        b = {"tokens": window[:, :-1], "targets": window[:, 1:]}
+        return jax.value_and_grad(lambda p: model.loss_fn(p, b))(params)
+
+    def grad_fn(params, client, rng):
+        return _grad(params, jnp.asarray(client, jnp.int32), rng)
+
+    erng = np.random.default_rng(seed + 7)
+    estarts = erng.integers(0, len(toks) - seq - 1, size=batch)
+    eval_batch = {
+        "tokens": jnp.asarray(np.stack([toks[s:s + seq] for s in estarts])),
+        "targets": jnp.asarray(
+            np.stack([toks[s + 1:s + seq + 1] for s in estarts]))}
+    _eval_loss = jax.jit(lambda p: model.loss_fn(p, eval_batch))
+
+    def eval_fn(params):
+        return {"loss": float(_eval_loss(params))}
+
+    return FLTask(params0, grad_fn, eval_fn, n_clients,
+                  {"kind": "lm", "model": cfg.name,
+                   "params": int(cfg.param_count())})

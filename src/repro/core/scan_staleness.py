@@ -51,6 +51,27 @@ same randomness arrays event-for-event, so given the same seed the host and
 scanned trajectories match to ≤1e-5 — including dropout, speed-skew,
 leave/re-join windows and the eval cadence
 (tests/test_scan_staleness.py pins all five algorithms).
+
+Two model layouts share one protocol program (`_staleness_program`):
+
+  * ``layout="flat"`` — the model is carried as the raveled (d,) vector
+    (the original engine; host-replay reference layout for the quadratic /
+    vision payloads and the sweep drivers below).
+  * ``layout="tree"`` — the model is carried as its parameter pytree: client
+    gradients are the model's own pjit grads on the (data, model) mesh (no
+    ravel on the hot path), the aggregator runs its tree-cache path (same
+    layout as the pjit train step in repro/core/distributed.py) and the
+    (tau_max+1, ·) model-history ring is a per-leaf stacked tree buffer —
+    optionally int8-quantized (``history_dtype="int8"``, ~4x smaller; the
+    trajectory then deviates from the f32 host replay by ring quantization
+    error, so the ≤1e-5 replay contract holds for the f32 ring only).
+
+Execution comes in two shapes: `make_staleness_runner` (one jitted scan over
+all events — the sweep/benchs path) and `make_chunked_staleness_runner`
+(explicit ``init``/``chunk`` calls over event slices; the carry between
+chunks is a plain pytree holding the FULL protocol state — model, aggregator
+cache + running sums, history ring, PRNG key — so `launch/train.py`
+checkpoints on chunk boundaries and resumes bit-exactly).
 """
 from __future__ import annotations
 
@@ -63,11 +84,13 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
+from repro.core.cache import (init_tree_cache, tree_cache_row,
+                              tree_cache_set_row)
 from repro.core.scan_engine import (ScanResult, _payload_chain, _to_result,
                                     default_n_events)
 from repro.core.staleness_sim import (NEVER, default_tau_max,
                                       staleness_client_probs)
-from repro.sharding.rules import replicate, shard
+from repro.sharding.rules import replicate, shard, use_rules
 
 
 @dataclasses.dataclass
@@ -177,14 +200,21 @@ def snapshot_update(snaps, hits, marks, t_new, emit, w):
 
 
 def _apply_evals(snaps, hits, marks, eval_fn, unravel):
-    """Run the host `eval_fn` over the marks the scan actually reached."""
+    """Run the host `eval_fn` over the marks the scan actually reached.
+    `unravel=None` means `snaps` is a params pytree with a leading
+    (n_marks,) axis (tree layout) rather than an (n_marks, d) array."""
     evals, eval_ts = [], []
     hits = np.asarray(hits)
-    snaps = np.asarray(snaps)
+    snaps = jax.tree.map(np.asarray, snaps)
     for i, m in enumerate(marks):
-        if hits[i]:
-            evals.append(eval_fn(unravel(jnp.asarray(snaps[i]))))
-            eval_ts.append(int(m))
+        if not hits[i]:
+            continue
+        if unravel is None:
+            params = jax.tree.map(lambda s: jnp.asarray(s[i]), snaps)
+        else:
+            params = unravel(jnp.asarray(snaps[i]))
+        evals.append(eval_fn(params))
+        eval_ts.append(int(m))
     return evals, eval_ts
 
 
@@ -195,44 +225,77 @@ def _select_tree(pred, new, old):
     return jax.tree.map(lambda a, b: jnp.where(pred, a, b), new, old)
 
 
+def _tree_global_norm(tree):
+    """‖tree‖₂ over all leaves — the tree layout's `unorm` metric, equal to
+    ``jnp.linalg.norm`` of the raveled vector."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _tree_payload_chain(grad_fn, local_steps: int, local_lr: float):
+    """Tree-layout client payload with the SAME PRNG-split chain as
+    `_payload_chain` (one split per call, plus one per local step when
+    local_steps > 1) but over the model pytree directly — no ravel/unravel
+    on the hot path, so the client grad keeps the model's own (data, model)
+    pjit layout end-to-end."""
+    K = local_steps
+
+    def payload(w, client, key):
+        key, sub = jax.random.split(key)
+        if K == 1:
+            loss, g = grad_fn(w, client, sub)
+            return (jax.tree.map(lambda x: x.astype(jnp.float32), g),
+                    loss, key)
+        w_start = w
+        loss = jnp.zeros(())
+        for _ in range(K):
+            key, sub = jax.random.split(key)
+            loss, g = grad_fn(w, client, sub)
+            w = jax.tree.map(lambda a, b: a - local_lr * b.astype(a.dtype),
+                             w, g)
+        p = jax.tree.map(
+            lambda a, b: ((a - b) / (K * local_lr)).astype(jnp.float32),
+            w_start, w)
+        return p, loss, key
+    return payload
+
+
 # ---------------------------------------------------------------------------
 
-def make_staleness_runner(*, grad_fn: Callable, params0,
-                          aggregator: Aggregator, n_clients: int, T: int,
-                          beta: float,
-                          server_lr: Optional[Callable] = None,
-                          tau_max: Optional[int] = None,
-                          speed_skew: float = 0.0,
-                          eval_marks: Optional[Sequence[int]] = None,
-                          local_steps: int = 1, local_lr: float = 0.05,
-                          init_cache_grads: bool = True,
-                          record_w: bool = False):
-    """Build the jitted runner
-    ``run(key, gumbels, tau_raw, leave_at, rejoin_at, lr)
-          -> (w, state, outs, extras)``.
+def _staleness_program(*, grad_fn: Callable, params0,
+                       aggregator: Aggregator, n_clients: int, T: int,
+                       beta: float,
+                       server_lr: Optional[Callable] = None,
+                       tau_max: Optional[int] = None,
+                       speed_skew: float = 0.0,
+                       eval_marks: Optional[Sequence[int]] = None,
+                       local_steps: int = 1, local_lr: float = 0.05,
+                       init_cache_grads: bool = True,
+                       record_w: bool = False,
+                       layout: str = "flat",
+                       history_dtype: str = "float32"):
+    """The protocol as two pure functions: ``(init_fn, chunk_fn, marks)``.
 
-    `lr` is a traced f32 scalar (constant server lr) so one compiled runner
-    serves the whole lr-tuning grid; pass a callable `server_lr` to bake an
-    iteration schedule instead (the runtime `lr` is then ignored).
-    ``leave_at``/``rejoin_at`` are traced (n,) int32 availability windows
-    (see `build_staleness_randomness`), so the same executable serves every
-    dropout fraction, trigger iteration and re-join scenario. `grad_fn` must
-    be trace-safe in `client`. The event count is the leading axis of the
-    ``gumbels``/``tau_raw`` inputs. With `eval_marks` (a static sorted tuple
-    of server iterations, see `eval_marks_for`), ``extras`` carries
-    ``snaps (n_marks, d)`` / ``hits (n_marks,)`` — the model at each reached
-    mark, for post-scan host evaluation. vmap the runner over stacked
-    ``(key, gumbels, tau_raw, leave_at, rejoin_at, lr)`` for seed/grid/
-    scenario sweeps."""
+    ``init_fn(key, lr) -> carry`` builds the initial scan carry (init-batch
+    cache seed, ring slot 0, eval snapshot buffer); ``chunk_fn(carry,
+    gumbels, tau_raw, leave_at, rejoin_at, lr) -> (carry, outs)`` scans any
+    slice of the event stream and composes: running it over consecutive
+    slices is bit-identical to one scan over their concatenation, because
+    the carry holds the FULL protocol state. Past-budget tail events are
+    harmless padding (emit is gated on ``t < T``; the model and state
+    freeze), so callers may round the stream up to a chunk multiple.
+
+    ``layout`` picks the model representation (see module docstring): "flat"
+    carries the raveled (d,) vector with the original byte-identical ops;
+    "tree" carries the params pytree, dispatches the aggregator onto its
+    tree-cache path and stores the history ring as a per-leaf stacked tree
+    buffer in ``history_dtype`` ("int8" opt-in — quantization error then
+    breaks the exact host-replay contract, by design)."""
     n = n_clients
-    flat0, unravel = ravel_pytree(params0)
-    w0 = jnp.asarray(flat0, jnp.float32)
-    d = w0.size
     agg = aggregator
     tau_max = tau_max if tau_max is not None else default_tau_max(beta)
     S = tau_max + 1
     wants_init = init_cache_grads and wants_cache_init(agg)
-    payload_fn = _payload_chain(grad_fn, unravel, local_steps, local_lr)
     log_probs = jnp.asarray(
         np.log(staleness_client_probs(n, speed_skew)), jnp.float32)
     marks = (jnp.asarray(eval_marks, jnp.int32)
@@ -243,40 +306,112 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
     lr_of_t = ((lambda t, lr: server_lr(t)) if server_lr is not None
                else (lambda t, lr: lr))
 
-    def _run(key, gumbels, tau_raw, leave_at, rejoin_at, lr):
+    if layout == "flat":
+        if history_dtype != "float32":
+            raise ValueError("quantized history ring is tree-layout only")
+        flat0, unravel = ravel_pytree(params0)
+        w0 = jnp.asarray(flat0, jnp.float32)
+        d_tpl = w0.size
+        payload_fn = _payload_chain(grad_fn, unravel, local_steps, local_lr)
+        # pin the raveled gradient replicated: the client grad is computed
+        # redundantly per device; only server state shards (see
+        # sharding/rules.replicate for the CPU-SPMD rationale)
+        pin_payload = replicate
+        init_ring = lambda: shard(
+            jnp.zeros((S, d_tpl), jnp.float32).at[0].set(w0),
+            (None, "cache_d"))
+        rd_ring, ap_ring = ring_read, ring_append
+        init_snaps = lambda: shard(
+            jnp.zeros((marks.shape[0], d_tpl), jnp.float32),
+            (None, "cache_d"))
+        snap_update = snapshot_update
+        init_mean = lambda rows: jnp.mean(rows, 0)
+        apply_init = lambda w, eta, mean: w - eta * mean
+        apply_update = lambda w, u, eta, emit: shard(
+            jnp.where(emit, w - eta * u, w), ("cache_d",))
+        unorm = jnp.linalg.norm
+    elif layout == "tree":
+        if record_w:
+            raise ValueError("record_w is flat-layout only (a per-event "
+                             "model trajectory buffer does not fit the tree "
+                             "path's real-model sizes)")
+        w0 = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params0)
+        d_tpl = w0  # Aggregator.init_state takes the pytree template as d
+        payload_fn = _tree_payload_chain(grad_fn, local_steps, local_lr)
+        # no replicate pin: tree-layout grads come from the model's own pjit
+        # computation and keep its (data, model) layout; the tree-cache row
+        # writes inherit it per leaf
+        pin_payload = lambda p: p
+        init_ring = lambda: tree_cache_set_row(
+            init_tree_cache(S, w0, history_dtype), 0, w0)
+
+        def rd_ring(ring, cursor, tau):
+            return tree_cache_row(ring, jnp.mod(cursor - tau, S))
+
+        def ap_ring(ring, cursor, w, emit):
+            # same unconditional-write trick as `ring_append`: a non-emitting
+            # event rewrites its own slot with the unchanged (re-quantized —
+            # deterministic) model
+            cursor = jnp.where(emit, jnp.mod(cursor + 1, S), cursor)
+            return tree_cache_set_row(ring, cursor, w), cursor
+
+        init_snaps = lambda: jax.tree.map(
+            lambda x: jnp.zeros((marks.shape[0],) + x.shape, jnp.float32),
+            w0)
+
+        def snap_update(snaps, hits, mk, t_new, emit, w):
+            hit = jnp.logical_and(emit, mk == t_new)     # (n_marks,) bool
+            snaps = jax.tree.map(
+                lambda s, x: jnp.where(hit.reshape((-1,) + (1,) * x.ndim),
+                                       x[None], s), snaps, w)
+            return snaps, jnp.logical_or(hits, hit)
+
+        init_mean = lambda rows: jax.tree.map(lambda r: jnp.mean(r, 0), rows)
+        apply_init = lambda w, eta, mean: jax.tree.map(
+            lambda wl, m: wl - eta * m.astype(jnp.float32), w, mean)
+        apply_update = lambda w, u, eta, emit: jax.tree.map(
+            lambda wl, ul: jnp.where(emit, wl - eta * ul.astype(jnp.float32),
+                                     wl), w, u)
+        unorm = _tree_global_norm
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+
+    def init_fn(key, lr):
         lr = jnp.asarray(lr, jnp.float32)
-        leave_at = jnp.asarray(leave_at, jnp.int32)
-        rejoin_at = jnp.asarray(rejoin_at, jnp.int32)
         w = w0
         if wants_init:
             def init_step(key, client):
                 p, _, key = payload_fn(w0, client, key)
-                return key, replicate(p)
+                return key, pin_payload(p)
             key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n))
-            state = agg.init_state(n, d, init_rows)
+            state = agg.init_state(n, d_tpl, init_rows)
             # paper Alg. 1 line 4-5: apply u^0 before the loop
-            w = w - lr_of_t(0, lr) * jnp.mean(init_rows, 0)
+            w = apply_init(w, lr_of_t(0, lr), init_mean(init_rows))
             t0 = 1
         else:
-            state = agg.init_state(n, d, None)
+            state = agg.init_state(n, d_tpl, None)
             t0 = 0
 
-        ring = shard(jnp.zeros((S, d), jnp.float32).at[0].set(w0),
-                     (None, "cache_d"))
+        ring = init_ring()
         cursor = jnp.asarray(0, jnp.int32)
         if wants_init:           # history = [w^0, w^1] after the init update
-            ring, cursor = ring_append(ring, cursor, w, True)
+            ring, cursor = ap_ring(ring, cursor, w, True)
 
-        carry0 = {"w": w, "key": key, "state": state,
-                  "t": jnp.asarray(t0, jnp.int32),
-                  # emitted-update count: tracks len(history)-1 in the host
-                  # deque; diverges from t after a freeze fast-forward jump
-                  "n_upd": jnp.asarray(t0, jnp.int32),
-                  "ring": ring, "cursor": cursor}
+        carry = {"w": w, "key": key, "state": state,
+                 "t": jnp.asarray(t0, jnp.int32),
+                 # emitted-update count: tracks len(history)-1 in the host
+                 # deque; diverges from t after a freeze fast-forward jump
+                 "n_upd": jnp.asarray(t0, jnp.int32),
+                 "ring": ring, "cursor": cursor}
         if marks is not None:
-            carry0["snaps"] = shard(jnp.zeros((marks.shape[0], d),
-                                              jnp.float32), (None, "cache_d"))
-            carry0["hits"] = jnp.zeros((marks.shape[0],), jnp.bool_)
+            carry["snaps"] = init_snaps()
+            carry["hits"] = jnp.zeros((marks.shape[0],), jnp.bool_)
+        return carry
+
+    def chunk_fn(carry, gumbels, tau_raw, leave_at, rejoin_at, lr):
+        lr = jnp.asarray(lr, jnp.float32)
+        leave_at = jnp.asarray(leave_at, jnp.int32)
+        rejoin_at = jnp.asarray(rejoin_at, jnp.int32)
 
         def step(carry, ev):
             g_row, traw = ev
@@ -295,41 +430,134 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
             j = jnp.argmax(logits + g_row).astype(jnp.int32)
             tau = jnp.minimum(jnp.floor(traw).astype(jnp.int32),
                               jnp.minimum(tau_max, carry["n_upd"]))
-            w_stale = ring_read(carry["ring"], carry["cursor"], tau)
+            w_stale = rd_ring(carry["ring"], carry["cursor"], tau)
             payload, loss, key = payload_fn(w_stale, j, carry["key"])
-            # pin the raveled gradient replicated: the client grad is
-            # computed redundantly per device; only server state shards
-            # (see sharding/rules.replicate for the CPU-SPMD rationale)
-            payload = replicate(payload)
+            payload = pin_payload(payload)
             state, u, emit, lr_scale = agg.step(
                 carry["state"], Arrival(j, payload, t, tau))
             emit = jnp.logical_and(emit, jnp.logical_and(t < T, any_alive))
             # frozen events perform no aggregator transition on the host
             state = _select_tree(any_alive, state, carry["state"])
             eta = lr_of_t(t, lr) * lr_scale
-            w = shard(jnp.where(emit, carry["w"] - eta * u, carry["w"]),
-                      ("cache_d",))
-            ring, cursor = ring_append(carry["ring"], carry["cursor"], w, emit)
+            w = apply_update(carry["w"], u, eta, emit)
+            ring, cursor = ap_ring(carry["ring"], carry["cursor"], w, emit)
             t_new = jnp.where(any_alive, t + emit.astype(jnp.int32), thaw_t)
             out = {"loss": loss, "emit": emit, "t": t,
-                   "unorm": jnp.linalg.norm(u), "alive": any_alive}
+                   "unorm": unorm(u), "alive": any_alive}
             if record_w:
                 out["w"] = w
             new_carry = {"w": w, "key": key, "state": state, "t": t_new,
                          "n_upd": carry["n_upd"] + emit.astype(jnp.int32),
                          "ring": ring, "cursor": cursor}
             if marks is not None:
-                new_carry["snaps"], new_carry["hits"] = snapshot_update(
+                new_carry["snaps"], new_carry["hits"] = snap_update(
                     carry["snaps"], carry["hits"], marks, t_new, emit, w)
             return new_carry, out
 
-        carry, outs = jax.lax.scan(step, carry0, (gumbels, tau_raw))
+        return jax.lax.scan(step, carry, (gumbels, tau_raw))
+
+    return init_fn, chunk_fn, marks
+
+
+def make_staleness_runner(*, grad_fn: Callable, params0,
+                          aggregator: Aggregator, n_clients: int, T: int,
+                          beta: float,
+                          server_lr: Optional[Callable] = None,
+                          tau_max: Optional[int] = None,
+                          speed_skew: float = 0.0,
+                          eval_marks: Optional[Sequence[int]] = None,
+                          local_steps: int = 1, local_lr: float = 0.05,
+                          init_cache_grads: bool = True,
+                          record_w: bool = False,
+                          layout: str = "flat",
+                          history_dtype: str = "float32"):
+    """Build the jitted runner
+    ``run(key, gumbels, tau_raw, leave_at, rejoin_at, lr)
+          -> (w, state, outs, extras)``.
+
+    `lr` is a traced f32 scalar (constant server lr) so one compiled runner
+    serves the whole lr-tuning grid; pass a callable `server_lr` to bake an
+    iteration schedule instead (the runtime `lr` is then ignored).
+    ``leave_at``/``rejoin_at`` are traced (n,) int32 availability windows
+    (see `build_staleness_randomness`), so the same executable serves every
+    dropout fraction, trigger iteration and re-join scenario. `grad_fn` must
+    be trace-safe in `client`. The event count is the leading axis of the
+    ``gumbels``/``tau_raw`` inputs. With `eval_marks` (a static sorted tuple
+    of server iterations, see `eval_marks_for`), ``extras`` carries
+    ``snaps`` / ``hits (n_marks,)`` — the model at each reached mark, for
+    post-scan host evaluation. vmap the runner over stacked
+    ``(key, gumbels, tau_raw, leave_at, rejoin_at, lr)`` for seed/grid/
+    scenario sweeps. With ``layout="tree"``, `w` and the snapshots are
+    params pytrees instead of raveled vectors (see `_staleness_program`)."""
+    init_fn, chunk_fn, marks = _staleness_program(
+        grad_fn=grad_fn, params0=params0, aggregator=aggregator,
+        n_clients=n_clients, T=T, beta=beta, server_lr=server_lr,
+        tau_max=tau_max, speed_skew=speed_skew, eval_marks=eval_marks,
+        local_steps=local_steps, local_lr=local_lr,
+        init_cache_grads=init_cache_grads, record_w=record_w,
+        layout=layout, history_dtype=history_dtype)
+
+    def _run(key, gumbels, tau_raw, leave_at, rejoin_at, lr):
+        carry = init_fn(key, lr)
+        carry, outs = chunk_fn(carry, gumbels, tau_raw, leave_at, rejoin_at,
+                               lr)
         extras = {}
         if marks is not None:
             extras = {"snaps": carry["snaps"], "hits": carry["hits"]}
         return carry["w"], carry["state"], outs, extras
 
     return jax.jit(_run)
+
+
+@dataclasses.dataclass
+class ChunkedStalenessRunner:
+    """Chunked execution of the scanned protocol (`launch/train.py` driver).
+
+    ``init(key, lr) -> carry`` then repeatedly ``chunk(carry, gumbels,
+    tau_raw, leave_at, rejoin_at, lr) -> (carry, outs)`` over consecutive
+    event slices — bit-identical to one scan over the whole stream. The
+    carry is a plain pytree of arrays holding the FULL protocol state
+    (model, aggregator cache + running sums + owner-ring, model-history
+    ring, PRNG key, eval snapshots), so it checkpoints/restores with the
+    generic pytree saver (repro/checkpoint) and a resumed run continues
+    exactly. ``marks`` mirrors the baked `eval_marks` static (None without
+    an eval cadence); with marks the carry holds ``snaps``/``hits`` for
+    `_apply_evals`."""
+    init: Callable
+    chunk: Callable
+    marks: Optional[jnp.ndarray]
+    tau_max: int
+    layout: str
+    mesh: object = None
+
+
+def make_chunked_staleness_runner(*, mesh=None, **kwargs
+                                  ) -> ChunkedStalenessRunner:
+    """`_staleness_program` with jitted init/chunk entry points; with `mesh`
+    (a (data, model) jax Mesh) every call runs under `use_rules(mesh)` so
+    the model's own logical-axis constraints and the server rules' cache
+    layout (clients → data, features → model) apply — the chunked analogue
+    of `make_sharded_staleness_runner`."""
+    init_fn, chunk_fn, marks = _staleness_program(**kwargs)
+    tau_max = kwargs.get("tau_max")
+    if tau_max is None:
+        tau_max = default_tau_max(kwargs["beta"])
+    jit_init, jit_chunk = jax.jit(init_fn), jax.jit(chunk_fn)
+    if mesh is None:
+        return ChunkedStalenessRunner(jit_init, jit_chunk, marks, tau_max,
+                                      kwargs.get("layout", "flat"))
+
+    def init(key, lr):
+        with use_rules(mesh):
+            return jit_init(key, lr)
+
+    def chunk(carry, gumbels, tau_raw, leave_at, rejoin_at, lr):
+        with use_rules(mesh):
+            return jit_chunk(carry, gumbels, tau_raw, leave_at, rejoin_at,
+                             lr)
+
+    return ChunkedStalenessRunner(init, chunk, marks, tau_max,
+                                  kwargs.get("layout", "flat"), mesh)
 
 
 def _window_slack(n_clients: int, rejoin_at, windows) -> int:
@@ -360,13 +588,17 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        n_events: Optional[int] = None, local_steps: int = 1,
                        local_lr: float = 0.05, init_cache_grads: bool = True,
                        seed: int = 0, record_w: bool = False,
-                       mesh=None) -> ScanResult:
+                       mesh=None, layout: str = "flat",
+                       history_dtype: str = "float32") -> ScanResult:
     """One device-resident run, trajectory-equivalent to
     ``StalenessSimulator(..., replay=build_staleness_randomness(seed, ...))``
     given the same arguments — including the eval cadence: with `eval_fn` and
     `eval_every`, `ScanResult.evals`/`eval_ts` match `SimResult` exactly.
     With `mesh` (a (data, model) jax Mesh), the run executes the sharded
-    GSPMD variant (repro/core/scan_sharded.py) — same trajectory ≤1e-5."""
+    GSPMD variant (repro/core/scan_sharded.py) — same trajectory ≤1e-5.
+    With ``layout="tree"``, `grad_fn` takes the params pytree (no ravel on
+    the hot path) and `ScanResult.w` is the raveled final model — the same
+    ≤1e-5 contract vs the flat/host paths holds for the f32 history ring."""
     if n_events is None:
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
@@ -382,14 +614,17 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
         server_lr=server_lr if callable(server_lr) else None,
         tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
         local_steps=local_steps, local_lr=local_lr,
-        init_cache_grads=init_cache_grads, record_w=record_w)
+        init_cache_grads=init_cache_grads, record_w=record_w,
+        layout=layout, history_dtype=history_dtype)
     lr = jnp.float32(0.0 if callable(server_lr) else server_lr)
     w, _, outs, extras = runner(jax.random.PRNGKey(seed), rand.gumbels,
                                 rand.tau_raw, rand.leave_at, rand.rejoin_at,
                                 lr)
+    if layout == "tree":
+        w = ravel_pytree(w)[0]
     evals, eval_ts = [], []
     if marks is not None:
-        unravel = ravel_pytree(params0)[1]
+        unravel = None if layout == "tree" else ravel_pytree(params0)[1]
         evals, eval_ts = _apply_evals(extras["snaps"], extras["hits"], marks,
                                       eval_fn, unravel)
     wants_init = init_cache_grads and wants_cache_init(aggregator)

@@ -1,60 +1,55 @@
-"""End-to-end AFL training driver.
+"""End-to-end AFL training driver — the scanned real-model path.
 
-Runs the distributed AFL server step (repro.core.distributed) for a selected
-architecture (reduced or full) on whatever devices exist, with the arrival
-schedule drawn from the paper's exponential delay model. Each server
-iteration: one client arrival -> whole-mesh gradient -> ACE/baseline server
-rule -> SGD. Supports checkpoint/resume and per-client non-IID token streams.
+Runs the paper's sampled-staleness protocol (Fig. 2) on a REAL transformer
+from repro.models: client gradients are the model's own pjit grads, the
+O(d) incremental server rules (ACE/ACED/CA2FL/…) run inside `jax.lax.scan`
+on the tree-cache layout, and the (tau_max+1, ·) model-history ring carries
+the stale reads (opt-in int8 via --history-dtype). Execution is chunked
+(`make_chunked_staleness_runner`): every chunk boundary is a checkpoint/
+resume point carrying the FULL protocol state — model, aggregator cache +
+running sums + owner-ring, history ring, PRNG key — so --ckpt-dir resumes
+exactly where it stopped, server rule included.
 
-Example (CPU, ~20M-param yi-family model, 200 steps):
+``--driver host`` runs the pinned host-loop replay reference
+(`StalenessSimulator` consuming the same precomputed randomness): given the
+same seed/config its trajectory matches the scanned path to ≤1e-5
+(tests/test_train_scan.py pins all five algorithms on the reduced yi
+config). On >1 visible devices the scan shards over a (data, model) mesh
+(``--mesh auto``; repro/core/scan_sharded.py layout contract).
+
+Example (CPU, ~0.8M-param yi-family model, 200 server iterations):
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
       --steps 200 --batch 8 --seq 256 --algo ace
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.configs.base import AFLConfig
+from repro.checkpoint import restore_train_checkpoint, save_train_checkpoint
 from repro.configs.registry import afl_config, get_config
-from repro.core.delays import ExponentialDelays, arrival_schedule
-from repro.core.distributed import make_afl_train_step
-from repro.data.synthetic import make_token_stream
-from repro.models import build_model
-from repro.optim import sgd, sqrt_nt_schedule
+from repro.core.aggregators import make_aggregator
+from repro.core.fl_tasks import make_lm_task
+from repro.core.scan_engine import default_n_events
+from repro.core.scan_staleness import (build_staleness_randomness,
+                                       make_chunked_staleness_runner)
+from repro.core.scan_sharded import staleness_mesh
+from repro.core.staleness_sim import StalenessSimulator, default_tau_max
+from repro.optim import sqrt_nt_schedule
 
 
-def client_batches(tokens, n_clients, batch, seq, seed=0):
-    """Non-IID client shards of the synthetic token stream: client i reads a
-    contiguous region (distinct local distribution since the stream's hash
-    state drifts)."""
-    rng = np.random.default_rng(seed)
-    per = len(tokens) // n_clients
-
-    def sample(client: int):
-        lo = client * per
-        starts = rng.integers(lo, lo + per - seq - 1, size=batch)
-        x = np.stack([tokens[s:s + seq] for s in starts])
-        y = np.stack([tokens[s + 1:s + seq + 1] for s in starts])
-        return {"tokens": jnp.asarray(x), "targets": jnp.asarray(y)}
-    return sample
-
-
-def main(argv=None):
+def _parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--layers", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=200,
+                    help="server iterations T")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--vocab", type=int, default=512)
@@ -62,66 +57,129 @@ def main(argv=None):
     ap.add_argument("--n-clients", type=int, default=8)
     ap.add_argument("--lr-scale", type=float, default=0.5)
     ap.add_argument("--beta", type=float, default=5.0)
-    ap.add_argument("--kappa", type=float, default=2.0)
+    ap.add_argument("--speed-skew", type=float, default=0.0)
+    ap.add_argument("--driver", choices=("scan", "host"), default="scan",
+                    help="scan: chunked device scan (default); host: the "
+                    "pinned replay reference loop")
+    ap.add_argument("--chunk-events", type=int, default=64,
+                    help="events per scanned chunk (checkpoint granularity)")
+    ap.add_argument("--history-dtype", choices=("float32", "int8"),
+                    default="float32",
+                    help="model-history ring layout; int8 is ~4x smaller "
+                    "but leaves the ≤1e-5 host-replay contract")
+    ap.add_argument("--cache-dtype", choices=("float32", "bfloat16", "int8"),
+                    default="float32",
+                    help="aggregator cache dtype (f32 default keeps the "
+                    "host replay exact; int8 quantizes per leaf here vs per "
+                    "raveled row on the flat reference)")
+    ap.add_argument("--mesh", choices=("auto", "none"), default="auto",
+                    help="auto: shard over a (data, model) mesh when >1 "
+                    "device is visible")
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-every", type=int, default=100,
+                    help="events between checkpoints (rounded to chunk "
+                    "boundaries)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
 
+
+def train(**overrides) -> float:
+    """Programmatic entry point: parser defaults + keyword overrides
+    (underscored option names, e.g. ``train(reduced=True, d_model=64)``) —
+    examples/train_lm.py uses this instead of re-encoding argv."""
+    args = _parser().parse_args([])
+    for k, v in overrides.items():
+        if not hasattr(args, k):
+            raise TypeError(f"unknown train option {k!r}")
+        setattr(args, k, v)
+    return _run(args)
+
+
+def main(argv=None) -> float:
+    return _run(_parser().parse_args(argv))
+
+
+def _run(args) -> float:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(layers=args.layers, d_model=args.d_model,
                           vocab=args.vocab)
-    print(f"model={cfg.name} params={cfg.param_count()/1e6:.1f}M "
-          f"algo={args.algo} clients={args.n_clients}")
-
-    model = build_model(cfg)
     aflc = afl_config(args.arch, algorithm=args.algo,
-                      n_clients=args.n_clients, delay_beta=args.beta)
-    lr = sqrt_nt_schedule(args.lr_scale, aflc.n_clients, args.steps)
-    init_fn, step_fn = make_afl_train_step(
-        lambda p, b: model.loss_fn(p, b), aflc, sgd(lr))
-    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+                      n_clients=args.n_clients, delay_beta=args.beta,
+                      cache_dtype=args.cache_dtype)
+    print(f"model={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"algo={args.algo} clients={aflc.n_clients} driver={args.driver}")
 
-    params = model.init(jax.random.PRNGKey(args.seed))
-    state = init_fn(params)
+    agg = make_aggregator(aflc)
+    task = make_lm_task(cfg=cfg, n_clients=aflc.n_clients, batch=args.batch,
+                        seq=args.seq, seed=args.seed)
+    T = args.steps
+    server_lr = sqrt_nt_schedule(args.lr_scale, aflc.n_clients, T)
+    tau_max = default_tau_max(args.beta)
+    n_events = default_n_events(agg, T, True)
+    C = max(1, args.chunk_events)
+    n_pad = -(-n_events // C) * C    # chunk multiple; tail events are
+    # harmless padding (emit is gated on t < T, model and state freeze)
+    rand = build_staleness_randomness(args.seed, n_pad, aflc.n_clients,
+                                      args.beta, speed_skew=args.speed_skew)
 
-    start = 0
+    if args.driver == "host":
+        sim = StalenessSimulator(
+            grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+            n_clients=aflc.n_clients, server_lr=server_lr, beta=args.beta,
+            tau_max=tau_max, speed_skew=args.speed_skew, seed=args.seed,
+            replay=rand)
+        res = sim.run(T)
+        final = float(np.mean(res.losses[-20:]))
+        print(f"final loss (mean last 20): {final:.4f}")
+        return final
+
+    mesh = staleness_mesh() if args.mesh == "auto" else None
+    runner = make_chunked_staleness_runner(
+        mesh=mesh, grad_fn=task.grad_fn, params0=task.params0,
+        aggregator=agg, n_clients=aflc.n_clients, T=T, beta=args.beta,
+        server_lr=server_lr, tau_max=tau_max, speed_skew=args.speed_skew,
+        layout="tree", history_dtype=args.history_dtype)
+
+    lr0 = jnp.float32(0.0)   # schedule baked in; runtime lr unused
+    carry = runner.init(jax.random.PRNGKey(args.seed), lr0)
+    e0 = 0
     if args.ckpt_dir:
-        last = latest_step(args.ckpt_dir)
-        if last is not None:
-            state = restore_checkpoint(args.ckpt_dir, last, state)
-            start = last
-            print(f"resumed from step {start}")
+        carry, e0 = restore_train_checkpoint(args.ckpt_dir, carry)
+        if e0:
+            print(f"resumed from event {e0} (t={int(carry['t'])})")
+        e0 = min(e0, n_pad)
 
-    toks = make_token_stream(n_tokens=1 << 18, vocab=cfg.vocab_size,
-                             seed=args.seed)
-    sample = client_batches(toks, aflc.n_clients, args.batch, args.seq,
-                            seed=args.seed)
-    delays = ExponentialDelays(beta=args.beta, kappa=args.kappa,
-                               n_clients=aflc.n_clients, seed=args.seed)
-    order = arrival_schedule(delays, args.steps)
-    last_seen = np.zeros(aflc.n_clients, np.int64)
-
+    losses: list = []
     t0 = time.time()
-    losses = []
-    for t in range(start, args.steps):
-        j = int(order[t])
-        staleness = t - last_seen[j]
-        last_seen[j] = t
-        batch = sample(j)
-        state, m = step_fn(state, batch, jnp.int32(j), jnp.int32(staleness))
-        losses.append(float(m["loss"]))
-        if (t + 1) % args.log_every == 0:
-            print(f"step {t+1:5d} client={j:3d} tau={staleness:4d} "
+    events_done, last_log = 0, 0
+    for lo in range(e0, n_pad, C):
+        hi = lo + C
+        carry, outs = runner.chunk(carry, rand.gumbels[lo:hi],
+                                   rand.tau_raw[lo:hi], rand.leave_at,
+                                   rand.rejoin_at, lr0)
+        em = np.asarray(outs["emit"])
+        losses.extend(np.asarray(outs["loss"])[em].tolist())
+        events_done += C
+        t_now = int(carry["t"])
+        if len(losses) - last_log >= args.log_every or hi >= n_pad:
+            last_log = len(losses)
+            dt = time.time() - t0
+            print(f"t={t_now:5d}/{T} events={hi} "
                   f"loss={np.mean(losses[-args.log_every:]):.4f} "
-                  f"|u|={float(m['update_norm']):.3f} "
-                  f"({(time.time()-t0)/(t-start+1):.2f}s/step)", flush=True)
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, t + 1, state)
-    print(f"final loss (mean last 20): {np.mean(losses[-20:]):.4f}")
-    return float(np.mean(losses[-20:]))
+                  f"({events_done/max(dt, 1e-9):.1f} ev/s)", flush=True)
+        if args.ckpt_dir and (hi // args.ckpt_every != lo // args.ckpt_every
+                              or hi >= n_pad or t_now >= T):
+            save_train_checkpoint(args.ckpt_dir, hi, carry)
+        if t_now >= T:
+            break
+
+    ev = task.eval_fn(carry["w"])
+    # resumed past the event budget => no fresh losses; report eval loss
+    final = float(np.mean(losses[-20:])) if losses else ev["loss"]
+    print(f"final loss (mean last 20): {final:.4f}  eval={ev}")
+    return final
 
 
 if __name__ == "__main__":

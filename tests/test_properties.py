@@ -273,3 +273,47 @@ def test_cache_update_invariant(n, d, seed):
     np.testing.assert_allclose(np.asarray(u),
                                np.asarray(ref.dequantize_rows_ref(q, s).mean(0)),
                                rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["asgd", "fedbuff", "ca2fl", "ace", "aced"]),
+       st.integers(2, 5), st.integers(1, 3), st.integers(4, 12),
+       st.integers(0, 10**6))
+def test_aggregator_step_tree_matches_flat_on_ravel(algo, n, M, steps, seed):
+    """`Aggregator.step` with pytree payloads + tree-cache state (the scanned
+    real-model train path) is the SAME transition as the flat (d,) layout on
+    ravel/unravel round-trips of random payload sequences — state init
+    included (`init_state` takes the pytree template as `d`). float32 caches:
+    int8 quantizes per leaf vs per raveled row by design."""
+    import jax
+    from jax.flatten_util import ravel_pytree
+
+    from repro.configs.base import AFLConfig
+    from repro.core.aggregators import Arrival, make_aggregator
+
+    rng = np.random.default_rng(seed)
+    template = {"a": jnp.zeros((2, 3)), "b": jnp.zeros(4)}
+    _, unravel = ravel_pytree(template)
+    d = 10
+    cfg = AFLConfig(algorithm=algo, n_clients=n, buffer_size=M, tau_algo=3)
+    agg = make_aggregator(cfg)
+    init_flat = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    init_tree = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[unravel(r) for r in init_flat])
+    s_flat = agg.init_state(n, d, init_flat)
+    s_tree = agg.init_state(n, template, init_tree)
+    t = 1
+    for _ in range(steps):
+        j = int(rng.integers(n))
+        tau = int(rng.integers(0, 5))
+        flat = jnp.asarray(rng.normal(size=d), jnp.float32)
+        s_flat, u_flat, e_flat, sc_flat = agg.step(
+            s_flat, Arrival(j, flat, t, tau))
+        s_tree, u_tree, e_tree, sc_tree = agg.step(
+            s_tree, Arrival(j, unravel(flat), t, tau))
+        assert bool(e_flat) == bool(e_tree)
+        np.testing.assert_allclose(np.asarray(ravel_pytree(u_tree)[0]),
+                                   np.asarray(u_flat), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(sc_tree), float(sc_flat),
+                                   rtol=1e-6, atol=0)
+        t += int(np.asarray(e_flat))

@@ -1,0 +1,206 @@
+"""Real-model scanned train path (ISSUE 6): the tree-layout staleness scan
+on an actual transformer LM task, differentially pinned against the host
+`StalenessSimulator` replay for all five production algorithms — plus the
+chunked-execution composition contract, checkpoint/resume equivalence
+through `repro.checkpoint`, the opt-in int8 model-history ring and the
+`history_ring_bytes` accounting. The 8-device three-way (host vs unsharded
+vs sharded tree scan) rides the `multidevice` marker like
+tests/test_scan_sharded.py."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core.aggregators import (ACED, ACEIncremental, CA2FL, FedBuff,
+                                    VanillaASGD)
+from repro.core.scan_engine import default_n_events
+from repro.core.scan_staleness import (build_staleness_randomness,
+                                       make_chunked_staleness_runner,
+                                       make_staleness_runner,
+                                       run_staleness_scan)
+from repro.core.staleness_sim import StalenessSimulator
+
+N, T, BETA, LR, SEED = 4, 16, 3.0, 0.05, 0
+
+AGGS = {
+    "asgd": lambda: VanillaASGD(),
+    "fedbuff": lambda: FedBuff(buffer_size=4),
+    "ca2fl": lambda: CA2FL(buffer_size=4),
+    "ace": lambda: ACEIncremental(),
+    "aced": lambda: ACED(tau_algo=5),
+}
+
+
+@functools.lru_cache(maxsize=1)
+def _lm_task():
+    """One tiny reduced-yi LM task shared by the whole module (the model
+    build + token stream is the expensive part, not the scans)."""
+    from repro.configs.registry import get_config
+    from repro.core.fl_tasks import make_lm_task
+    cfg = get_config("yi-9b").reduced(layers=2, d_model=64, vocab=128)
+    return make_lm_task(cfg=cfg, n_clients=N, batch=2, seq=32,
+                        n_tokens=1 << 14, seed=SEED)
+
+
+def _rand(agg, n_events=None):
+    if n_events is None:
+        n_events = default_n_events(agg, T)
+    return build_staleness_randomness(SEED, n_events, N, BETA)
+
+
+def _host_run(algo):
+    task = _lm_task()
+    agg = AGGS[algo]()
+    sim = StalenessSimulator(
+        grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+        n_clients=N, server_lr=LR, beta=BETA, seed=SEED, replay=_rand(agg))
+    hr = sim.run(T)
+    return sim, hr
+
+
+def _scan_kw(algo):
+    task = _lm_task()
+    return dict(grad_fn=task.grad_fn, params0=task.params0,
+                aggregator=AGGS[algo](), n_clients=N, server_lr=LR, T=T,
+                beta=BETA, seed=SEED, layout="tree")
+
+
+@pytest.mark.parametrize("algo", sorted(AGGS))
+def test_tree_scan_matches_host_on_lm_task(algo):
+    """Tentpole contract: the scanned real-model path (tree payloads, tree
+    aggregator state, tree history ring) replays the host simulator ≤1e-5
+    on the reduced yi LM task — per-algorithm, losses and trajectory."""
+    sim, hr = _host_run(algo)
+    sr = run_staleness_scan(**_scan_kw(algo))
+    assert np.max(np.abs(sr.w - np.asarray(sim.w))) <= 1e-5
+    assert sr.ts.tolist() == hr.ts
+    np.testing.assert_allclose(sr.losses, hr.losses, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sr.update_norms, hr.update_norms,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("algo", sorted(AGGS))
+def test_sharded_tree_scan_three_way(algo, device_mesh):
+    """host replay vs unsharded tree scan vs 8-device sharded tree scan on
+    one random stream: the (data, model) mesh may only reorder reductions,
+    so all three trajectories agree ≤1e-5."""
+    sim, hr = _host_run(algo)
+    sr = run_staleness_scan(**_scan_kw(algo))
+    shr = run_staleness_scan(mesh=device_mesh, **_scan_kw(algo))
+    np.testing.assert_allclose(shr.w, sr.w, rtol=1e-5, atol=1e-5)
+    assert shr.ts.tolist() == sr.ts.tolist() == hr.ts
+    np.testing.assert_allclose(shr.losses, hr.losses, rtol=1e-4, atol=1e-5)
+    assert np.max(np.abs(shr.w - np.asarray(sim.w))) <= 1e-5
+
+
+def test_chunked_scan_composes_bit_identically():
+    """chunk_fn over consecutive slices == one scan over the concatenation
+    (the carry holds the FULL protocol state), including the harmless
+    past-budget padding tail the train driver rounds up to."""
+    task = _lm_task()
+    agg = AGGS["aced"]()
+    C = 16
+    n_pad = -(-default_n_events(agg, T) // C) * C
+    rand = _rand(agg, n_pad)
+    kw = dict(grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+              n_clients=N, T=T, beta=BETA, layout="tree")
+    one = make_staleness_runner(**kw)
+    w1, _, outs1, _ = one(jax.random.PRNGKey(SEED), rand.gumbels,
+                          rand.tau_raw, rand.leave_at, rand.rejoin_at,
+                          jnp.float32(LR))
+    runner = make_chunked_staleness_runner(**kw)
+    carry = runner.init(jax.random.PRNGKey(SEED), jnp.float32(LR))
+    losses = []
+    for lo in range(0, n_pad, C):
+        carry, outs = runner.chunk(carry, rand.gumbels[lo:lo + C],
+                                   rand.tau_raw[lo:lo + C], rand.leave_at,
+                                   rand.rejoin_at, jnp.float32(LR))
+        losses.append(np.asarray(outs["loss"]))
+    for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(carry["w"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.concatenate(losses),
+                                  np.asarray(outs1["loss"]))
+
+
+def test_checkpoint_resume_is_equivalent(tmp_path):
+    """Satellite 1: interrupt at a chunk boundary, round-trip the FULL carry
+    (model, aggregator state, history ring, PRNG key) through
+    save/restore_train_checkpoint, finish — final model matches the
+    uninterrupted run ≤1e-5 (f32 npz round-trip: exactly)."""
+    from repro.checkpoint import (restore_train_checkpoint,
+                                  save_train_checkpoint)
+    task = _lm_task()
+    agg = AGGS["ace"]()
+    C = 16
+    n_pad = -(-default_n_events(agg, T) // C) * C
+    rand = _rand(agg, n_pad)
+    runner = make_chunked_staleness_runner(
+        grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
+        n_clients=N, T=T, beta=BETA, layout="tree")
+    lr = jnp.float32(LR)
+
+    def chunks(carry, lo, hi):
+        for o in range(lo, hi, C):
+            carry, _ = runner.chunk(carry, rand.gumbels[o:o + C],
+                                    rand.tau_raw[o:o + C], rand.leave_at,
+                                    rand.rejoin_at, lr)
+        return carry
+
+    straight = chunks(runner.init(jax.random.PRNGKey(SEED), lr), 0, n_pad)
+
+    mid = (n_pad // C // 2) * C
+    carry = chunks(runner.init(jax.random.PRNGKey(SEED), lr), 0, mid)
+    save_train_checkpoint(tmp_path, mid, carry)
+    template = runner.init(jax.random.PRNGKey(SEED), lr)   # fresh state
+    restored, e0 = restore_train_checkpoint(tmp_path, template)
+    assert e0 == mid
+    resumed = chunks(restored, mid, n_pad)
+
+    for a, b in zip(jax.tree.leaves(straight), jax.tree.leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-5)
+
+
+def test_int8_history_ring_stays_close():
+    """Opt-in int8 ring: quantization leaves the exact ≤1e-5 host contract
+    by design but must stay a faithful trajectory — final model within 5%
+    relative of the f32 ring on the same stream, all losses finite."""
+    f32 = run_staleness_scan(**_scan_kw("ace"))
+    q = run_staleness_scan(history_dtype="int8", **_scan_kw("ace"))
+    assert np.all(np.isfinite(q.losses))
+    rel = np.linalg.norm(q.w - f32.w) / np.linalg.norm(f32.w)
+    assert rel < 0.05, rel
+    assert np.max(np.abs(q.w - f32.w)) < 0.05 * np.max(np.abs(f32.w))
+
+
+def test_layout_guards():
+    """flat + quantized ring and tree + record_w are rejected up front."""
+    task = _lm_task()
+    kw = dict(grad_fn=task.grad_fn, params0=task.params0,
+              aggregator=VanillaASGD(), n_clients=N, T=T, beta=BETA)
+    with pytest.raises(ValueError, match="tree-layout only"):
+        make_staleness_runner(layout="flat", history_dtype="int8", **kw)
+    with pytest.raises(ValueError, match="flat-layout only"):
+        make_staleness_runner(layout="tree", record_w=True, **kw)
+
+
+def test_history_ring_bytes_matches_allocation():
+    """`history_ring_bytes` (the Table a.3 accounting) is allocation-exact
+    for both ring dtypes, and the flat formula is the raveled f32 ring."""
+    from repro.core.cache import init_tree_cache, tree_cache_nbytes
+    from repro.core.distributed import history_ring_bytes
+    params = _lm_task().params0
+    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    tau_max = 7
+    S = tau_max + 1
+    for hdt in ("float32", "int8"):
+        ring = init_tree_cache(S, params, hdt)
+        assert history_ring_bytes(params, tau_max, hdt) == \
+            tree_cache_nbytes(ring)
+    assert history_ring_bytes(params, tau_max, layout="flat") == S * d * 4
+    with pytest.raises(ValueError):
+        history_ring_bytes(params, tau_max, layout="ring")

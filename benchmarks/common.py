@@ -136,19 +136,38 @@ def _final_acc(task, unravel, r, T) -> float:
     return _acc_of(task.eval_fn(unravel(jnp.asarray(r.w))))
 
 
-def _summarize(task, results, wall: float, T: Optional[int] = None) -> Dict:
+def _fault_counts(results) -> Optional[Dict[str, int]]:
+    """Aggregate guard-pipeline counters across seeds; None when no run
+    carried them (guards off — the usual suite configuration)."""
+    total: Dict[str, int] = {}
+    for r in results:
+        for k, v in getattr(r, "faults", {}).items():
+            total[k] = total.get(k, 0) + int(v)
+    return total or None
+
+
+def _summarize(task, results, wall: float, T: Optional[int] = None,
+               expect_faults: bool = False) -> Dict:
     """Per-seed ScanResults -> benchmark row: final-eval accuracy per seed,
     comms aggregated across seeds, update-norm tail CV per seed, plus the
-    seed-mean eval trajectory when an eval cadence was requested."""
+    seed-mean eval trajectory when an eval cadence was requested.
+    Guard-pipeline counters ride along as ``fault_counts`` (None when guards
+    are off); a counter firing in a clean run (no injected faults expected)
+    raises — it means a client payload went non-finite or over-stale in a
+    configuration that should never produce one."""
     unravel = ravel_pytree(task.params0)[1]
     accs = [_final_acc(task, unravel, r, T) for r in results]
     unorm_cvs = [_unorm_cv(r.update_norms) for r in results]
+    fc = _fault_counts(results)
+    if fc and any(fc.values()) and not expect_faults:
+        raise RuntimeError(f"guard pipeline fired in a clean run: {fc}")
     iters = sum(max(len(r.losses), 1) for r in results)
     return {"acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
             "accs": [float(a) for a in accs],
             "us_per_iter": wall / iters * 1e6,
             "comms": float(np.mean([r.total_comms for r in results])),
-            "unorm_cvs": unorm_cvs, **_eval_curve(results)}
+            "unorm_cvs": unorm_cvs, "fault_counts": fc,
+            **_eval_curve(results)}
 
 
 def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
@@ -208,6 +227,7 @@ def _run_algo_host(task, agg_factory, *, T, beta, lr, seeds, dropout_frac,
             "accs": [float(a) for a in accs],
             "us_per_iter": wall / iters * 1e6,
             "comms": float(np.mean(comms)), "unorm_cvs": unorm_cvs,
+            "fault_counts": _fault_counts(results),
             **_eval_curve(results)}
 
 

@@ -36,7 +36,7 @@ from repro.core.scan_engine import (default_n_events, make_scan_runner,
 from repro.core.scan_sharded import (make_sharded_staleness_runner,
                                      staleness_mesh)
 from repro.core.scan_staleness import (build_staleness_randomness,
-                                       make_staleness_runner)
+                                       make_staleness_runner, no_faults)
 from repro.core.simulator import AFLSimulator
 from repro.core.staleness_sim import StalenessSimulator
 
@@ -344,14 +344,75 @@ def _train_scan_rows(fast=True):
     return rows
 
 
+def _guard_rows(fast=True):
+    """Fault-guard pipeline overhead (ISSUE 7): the staleness scan with the
+    in-scan guard pipeline (non-finite quarantine + global-norm clip +
+    over-stale rejection) compiled in vs off, on the noiseless quadratic
+    rule workload. The guarded run uses an all-clean schedule and clip off:
+    no guard may fire (counters gate) and the trajectory must match the
+    unguarded scan ≤1e-5 — the overhead number is then pure pipeline cost."""
+    n, T, d, beta, seed, lr = 100, 300 if fast else 500, 1024, 5.0, 0, 0.05
+    grad_fn = _quad_grad_fn(n, d, sigma=0.0)
+    agg_f = lambda: ACEIncremental()
+    n_events = default_n_events(agg_f(), T)
+    rand = build_staleness_randomness(seed, n_events, n, beta)
+    base_args = (jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
+                 rand.leave_at, rand.rejoin_at, jnp.float32(lr))
+    fa = no_faults(n_events)
+    out = {}
+    for tag, guards in (("off", False), ("on", True)):
+        runner = make_staleness_runner(
+            grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=agg_f(),
+            n_clients=n, T=T, beta=beta, guards=guards)
+        args = base_args + ((fa.kind, fa.scale, jnp.float32(0.0))
+                            if guards else ())
+        t0 = time.time()
+        jax.block_until_ready(runner(*args)[0])
+        compile_s = time.time() - t0
+        best = float("inf")
+        for _ in range(5):                  # min-of-5: robust to load spikes
+            t0 = time.time()
+            res = runner(*args)
+            jax.block_until_ready(res[0])
+            best = min(best, time.time() - t0)
+        out[tag] = (best, res, compile_s)
+    w_off, w_on = out["off"][1][0], out["on"][1][0]
+    dev = float(np.max(np.abs(np.asarray(w_on) - np.asarray(w_off))))
+    fired = {k: int(np.asarray(out["on"][1][2][k]).sum())
+             for k in ("quarantined", "clipped", "rejected")}
+    off_s, on_s = out["off"][0], out["on"][0]
+    overhead = on_s / max(off_s, 1e-9)
+    rows = [
+        {"bench": "scan_bench", "algo": "staleness_guards_off",
+         "events_per_sec": n_events / max(off_s, 1e-9), "wall_s": off_s,
+         "compile_s": out["off"][2], "n_clients": n, "d": d,
+         "derived": f"wall={off_s:.2f}s"},
+        {"bench": "scan_bench", "algo": "staleness_guards_on",
+         "events_per_sec": n_events / max(on_s, 1e-9), "wall_s": on_s,
+         "compile_s": out["on"][2], "n_clients": n, "d": d,
+         "overhead_vs_off": overhead, "max_dev_vs_off": dev,
+         "fault_counts": fired,
+         "derived": f"overhead={overhead:.2f}x_dev={dev:.1e}"},
+    ]
+    if any(fired.values()):
+        raise AssertionError(
+            f"guard pipeline fired on a clean schedule: {fired}")
+    if dev > 1e-5:
+        raise AssertionError(
+            f"guarded scan (clean schedule) deviates from unguarded: "
+            f"{dev:.2e} > 1e-5")
+    return rows
+
+
 def main(fast=True, write_json=True):
     rows = (_event_rows(fast) + _staleness_rows(fast) + _rule_rows(fast)
-            + _train_scan_rows(fast))
+            + _train_scan_rows(fast) + _guard_rows(fast))
     if write_json:
         payload = {"workloads": {
             "event": "100-client x 500-iter ACE quadratic",
             "staleness": "50-client x 400-iter ACE vision",
-            "train_scan": "4-client x 30-iter reduced-yi LM (tree layout)"},
+            "train_scan": "4-client x 30-iter reduced-yi LM (tree layout)",
+            "guards": "100-client x 300-iter ACE quadratic, clean schedule"},
             "fast": fast, "backend": jax.default_backend(), "rows": rows}
         with open(BENCH_JSON, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)

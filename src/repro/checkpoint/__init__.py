@@ -1,4 +1,5 @@
 from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
                                          restore_train_checkpoint,
                                          save_checkpoint,
-                                         save_train_checkpoint)
+                                         save_train_checkpoint,
+                                         verify_checkpoint)

@@ -1,12 +1,26 @@
 """Pytree checkpointing: npz payload + json treedef, sharding-aware
 (device arrays are host-gathered before save). Covers params, optimizer
 state, and the ACE server cache (so an AFL run resumes with its staleness
-registers intact)."""
+registers intact).
+
+Crash safety: payloads are written to a temp file in the target directory,
+fsynced, then published with `os.replace` — a reader never observes a
+half-written checkpoint under the final name. Each payload carries a
+``<name>.sha256`` sidecar (hex digest of the published bytes, also written
+atomically); `verify_checkpoint` checks it, and `restore_train_checkpoint`
+walks checkpoints newest-first, skipping any that fail verification or
+parsing, so a run killed mid-save (or a corrupted file) falls back to the
+last verified checkpoint automatically. Saves retry with exponential
+backoff on transient IO errors.
+"""
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
+import time
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -22,29 +36,116 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _sidecar(path: str) -> str:
+    return path + ".sha256"
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _atomic_write_bytes(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def verify_checkpoint(path: str) -> bool:
+    """True iff `path` exists and matches its ``.sha256`` sidecar. Legacy
+    checkpoints without a sidecar verify by parsing (np.load must succeed) —
+    pre-existing runs stay restorable."""
+    if not os.path.isfile(path):
+        return False
+    side = _sidecar(path)
+    if os.path.isfile(side):
+        try:
+            with open(side) as f:
+                want = f.read().strip()
+            return _sha256(path) == want
+        except OSError:
+            return False
+    try:
+        with np.load(path) as data:
+            data.files
+        return True
+    except Exception:
+        return False
+
+
 def save_checkpoint(directory: str, step: int, tree: Any, *, prefix="ckpt",
-                    keep: int = 3) -> str:
+                    keep: int = 3, retries: int = 3,
+                    backoff: float = 0.05) -> str:
+    """Atomically persist `tree` as ``<prefix>_<step>.npz`` + checksum
+    sidecar. The payload is published (os.replace) before its sidecar, so a
+    crash between the two leaves a file that still verifies via the legacy
+    parse path. Transient IO errors retry up to `retries` times with
+    exponential backoff."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"{prefix}_{step:08d}.npz")
+    tmp = path + ".tmp"
     flat = _flatten_with_paths(tree)
-    np.savez(path, **flat)
+    last_err = None
+    for attempt in range(retries + 1):
+        try:
+            # open file handle, not a str path: np.savez would append ".npz"
+            # to a bare path and break the os.replace pairing
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            _atomic_write_bytes(_sidecar(path),
+                                (_sha256(path) + "\n").encode())
+            break
+        except OSError as err:
+            last_err = err
+            try:
+                if os.path.isfile(tmp):
+                    os.remove(tmp)
+            except OSError:
+                pass
+            if attempt == retries:
+                raise
+            time.sleep(backoff * (2 ** attempt))
+    else:  # pragma: no cover - loop always breaks or raises
+        raise last_err
     # structure file for restore
     struct = jax.tree.map(lambda x: None, tree)
     with open(os.path.join(directory, f"{prefix}_structure.json"), "w") as f:
         json.dump(jax.tree_util.tree_structure(struct).__repr__(), f)
-    # rotate
+    # rotate (sidecars travel with their payloads)
     ckpts = sorted(p for p in os.listdir(directory)
                    if p.startswith(prefix + "_") and p.endswith(".npz"))
     for old in ckpts[:-keep]:
-        os.remove(os.path.join(directory, old))
+        for stale in (os.path.join(directory, old),
+                      _sidecar(os.path.join(directory, old))):
+            if os.path.isfile(stale):
+                os.remove(stale)
     return path
 
 
-def latest_step(directory: str, prefix="ckpt") -> Optional[int]:
+def _all_steps(directory: str, prefix: str):
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for p in os.listdir(directory)
-             if (m := re.match(rf"{prefix}_(\d+)\.npz$", p))]
+        return []
+    return sorted(int(m.group(1)) for p in os.listdir(directory)
+                  if (m := re.match(rf"{prefix}_(\d+)\.npz$", p)))
+
+
+def latest_step(directory: str, prefix="ckpt",
+                verified: bool = False) -> Optional[int]:
+    """Newest checkpoint step, or None. With ``verified=True``, the newest
+    step whose payload passes `verify_checkpoint`."""
+    steps = _all_steps(directory, prefix)
+    if verified:
+        steps = [s for s in steps if verify_checkpoint(
+            os.path.join(directory, f"{prefix}_{s:08d}.npz"))]
     return max(steps) if steps else None
 
 
@@ -84,12 +185,26 @@ def save_train_checkpoint(directory: str, event: int, carry: Any, *,
 
 
 def restore_train_checkpoint(directory: str, carry_template: Any):
-    """-> (carry, event) from the newest train checkpoint, or
+    """-> (carry, event) from the newest *verified* train checkpoint, or
     ``(carry_template, 0)`` when none exists. `carry_template` is a freshly
-    built carry (shape/dtype donor) — e.g. ``runner.init(key, lr)``."""
-    last = latest_step(directory, prefix=_TRAIN_PREFIX)
-    if last is None:
-        return carry_template, 0
-    payload = restore_checkpoint(directory, last, {"carry": carry_template},
-                                 prefix=_TRAIN_PREFIX)
-    return payload["carry"], last
+    built carry (shape/dtype donor) — e.g. ``runner.init(key, lr)``.
+
+    Checkpoints that fail checksum verification or don't parse/restore (a
+    run killed mid-save, disk corruption) are skipped with a RuntimeWarning
+    and the walk falls back to the next-newest one."""
+    for step in reversed(_all_steps(directory, _TRAIN_PREFIX)):
+        path = os.path.join(directory, f"{_TRAIN_PREFIX}_{step:08d}.npz")
+        if not verify_checkpoint(path):
+            warnings.warn(f"skipping corrupt checkpoint {path} "
+                          "(checksum/parse failure)", RuntimeWarning)
+            continue
+        try:
+            payload = restore_checkpoint(directory, step,
+                                         {"carry": carry_template},
+                                         prefix=_TRAIN_PREFIX)
+        except Exception as err:  # truncated/unreadable despite checksum
+            warnings.warn(f"skipping unrestorable checkpoint {path}: {err}",
+                          RuntimeWarning)
+            continue
+        return payload["carry"], step
+    return carry_template, 0

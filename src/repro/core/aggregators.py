@@ -196,6 +196,16 @@ class Aggregator:
             return state, None, float(lr_scale)
         return state, update, float(lr_scale)
 
+    def resync(self, state):
+        """Exact self-heal: re-derive every incrementally-maintained running
+        aggregate from the authoritative per-client cache. O(n·d) — never on
+        the per-event hot path; the engines invoke it every `resync_every`
+        emitted steps (`jax.lax.cond` in the scan, so a skipped step costs
+        nothing unvmapped), bounding float drift and recovering from any
+        corrupted running sum. Must be trace-safe and preserve the state
+        pytree's structure/dtypes. Rules without running sums are a no-op."""
+        return state
+
     def nbytes(self, state) -> int:
         import numpy as _np
         return sum(_np.asarray(a).nbytes for a in jax.tree.leaves(state))
@@ -311,6 +321,11 @@ class CA2FL(Aggregator):
             "count": jnp.where(emit, 0, count)}
         return new_state, update, emit, _ONE
 
+    def resync(self, state):
+        h = state["h"]
+        h_sum = _shard_vec(_astate(cache_sum(h), self.state_dtype), h)
+        return {**state, "h_sum": h_sum}
+
 
 @dataclasses.dataclass
 class CA2FLDirect(Aggregator):
@@ -410,6 +425,10 @@ class ACEIncremental(Aggregator):
                                     + (nw - od) / n).astype(u_.dtype),
                 u, new, old)
         return {"cache": cache, "u": u}, u, _TRUE, _ONE
+
+    def resync(self, state):
+        u = _astate(cache_mean(state["cache"]), self.state_dtype)
+        return {**state, "u": u}
 
 
 @dataclasses.dataclass
@@ -566,6 +585,23 @@ class ACED(Aggregator):
                      "init_sum": init_sum, "init_count": init_count,
                      "init_mask": init_mask}
         return new_state, update, count > 0, _ONE
+
+    def resync(self, state):
+        """Recompute asum/count (and the init-cohort correction state) from
+        the cache: the active set after the step at t_prev is exactly
+        {i : t_prev − t_start_i ≤ τ_algo} — init members ride along through
+        their shared t_start = 1 until the one-time fire at t = τ_algo+2."""
+        cache, t_start = state["cache"], state["t_start"]
+        active = (state["t_prev"] - t_start) <= self.tau_algo
+        init_mask = state["init_mask"]
+        asum = _shard_vec(
+            _astate(cache_sum(cache, active), self.state_dtype), cache)
+        init_sum = _shard_vec(
+            _astate(cache_sum(cache, init_mask), self.state_dtype), cache)
+        return {**state, "asum": asum,
+                "count": jnp.sum(active.astype(jnp.int32)),
+                "init_sum": init_sum,
+                "init_count": jnp.sum(init_mask.astype(jnp.int32))}
 
 
 @dataclasses.dataclass

@@ -295,16 +295,23 @@ def cache_mean(cache, mask=None):
     return tree_cache_mean(cache, mask)
 
 
-def cache_sum(cache):
-    """Σ over dequantized client rows — the one-time O(n·d) seed of the
-    incremental rules' running sums (ACED's asum/init_sum); never on a hot
-    path."""
+def cache_sum(cache, mask=None):
+    """Σ over dequantized client rows (optionally ``mask``-gated, an (n,)
+    bool/float row selector) — the one-time O(n·d) seed of the incremental
+    rules' running sums (ACED's asum/init_sum) and the periodic
+    `Aggregator.resync` exact recompute; never on a per-event hot path."""
     if isinstance(cache, FlatCache):
-        return cache.dequant().sum(0)
+        rows = cache.dequant()
+        if mask is None:
+            return rows.sum(0)
+        return jnp.sum(rows * mask.astype(jnp.float32)[:, None], 0)
 
     def leaf(c):
         rows = c["q"].astype(jnp.float32)
         if c["q"].dtype == jnp.int8:
             rows = rows * c["scale"].reshape((-1,) + (1,) * (rows.ndim - 1))
-        return jnp.sum(rows, 0)
+        if mask is None:
+            return jnp.sum(rows, 0)
+        m = mask.astype(jnp.float32).reshape((-1,) + (1,) * (rows.ndim - 1))
+        return jnp.sum(rows * m, 0)
     return jax.tree.map(leaf, cache, is_leaf=is_tree_cache_leaf)

@@ -58,6 +58,9 @@ class ScanResult:
     ws: Optional[np.ndarray] = None   # (n_events, d) model after each event
     evals: List[Dict] = dataclasses.field(default_factory=list)
     eval_ts: List[int] = dataclasses.field(default_factory=list)
+    #: guard-pipeline counters (quarantined/clipped/rejected) — populated by
+    #: the staleness scan when fault guards are on, else empty
+    faults: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def final_eval(self) -> Dict:
         return self.evals[-1] if self.evals else {}
@@ -195,13 +198,16 @@ def _to_result(w, outs, T: int, n_init_comms: int, evals=None,
                 f"clients still available ({emit.size} events); pass a "
                 f"larger n_events or set guaranteed_emit=False on the "
                 f"aggregator for automatic headroom")
+    faults = {k: int(np.asarray(outs[k]).sum())
+              for k in ("quarantined", "clipped", "rejected") if k in outs}
     return ScanResult(
         ts=ts[emit], losses=np.asarray(outs["loss"])[emit],
         update_norms=np.asarray(outs["unorm"])[emit],
         w=np.asarray(w), total_comms=n_init_comms + processed, emit=emit,
         ws=np.asarray(outs["w"]) if "w" in outs else None,
         evals=list(evals) if evals else [],
-        eval_ts=list(eval_ts) if eval_ts else [])
+        eval_ts=list(eval_ts) if eval_ts else [],
+        faults=faults)
 
 
 def run_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,

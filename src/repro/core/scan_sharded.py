@@ -91,9 +91,10 @@ def make_sharded_staleness_runner(*, mesh, **kwargs):
     base = make_staleness_runner(**kwargs)
 
     @functools.wraps(base)
-    def run(key, gumbels, tau_raw, leave_at, rejoin_at, lr):
+    def run(key, gumbels, tau_raw, leave_at, rejoin_at, lr, *guard_args):
         with use_rules(mesh):
-            return base(key, gumbels, tau_raw, leave_at, rejoin_at, lr)
+            return base(key, gumbels, tau_raw, leave_at, rejoin_at, lr,
+                        *guard_args)
 
     run.mesh = mesh
     run.base = base

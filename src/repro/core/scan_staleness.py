@@ -72,11 +72,21 @@ all events — the sweep/benchs path) and `make_chunked_staleness_runner`
 chunks is a plain pytree holding the FULL protocol state — model, aggregator
 cache + running sums, history ring, PRNG key — so `launch/train.py`
 checkpoints on chunk boundaries and resumes bit-exactly).
+
+Fault tolerance (``guards=True``): a `FaultSchedule` is one more per-event
+runtime array pair — injected NaN payloads, norm explosions, Byzantine sign
+flips and over-stale arrivals flow through a traced guard pipeline
+(quarantine / global-norm clip / staleness rejection) whose counters ride in
+the scan carry; `StalenessSimulator(faults=...)` mirrors it event-for-event,
+so the ≤1e-5 replay contract extends to faulted runs. ``resync_every``
+periodically recomputes the incremental ACED/CA²FL running sums exactly from
+the cache (`Aggregator.resync`) inside the scan — self-healing against
+accumulated drift.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +98,9 @@ from repro.core.cache import (init_tree_cache, tree_cache_row,
                               tree_cache_set_row)
 from repro.core.scan_engine import (ScanResult, _payload_chain, _to_result,
                                     default_n_events)
-from repro.core.staleness_sim import (NEVER, default_tau_max,
+from repro.core.staleness_sim import (FAULT_BYZANTINE, FAULT_EXPLODE,
+                                      FAULT_NAN, FAULT_NONE, FAULT_OVERSTALE,
+                                      NEVER, default_tau_max,
                                       staleness_client_probs)
 from repro.sharding.rules import replicate, shard, use_rules
 
@@ -149,6 +161,70 @@ def build_staleness_randomness(seed: int, n_events: int, n_clients: int,
         if rejoin_at is not None:
             rejoin = rejoin.at[idx].set(rejoin_at)
     return StalenessRandomness(gumbels, tau_raw, leave, rejoin)
+
+
+# ---------------------------------------------------------------------------
+# Traced client-fault model: per-event fault descriptors as runtime arrays —
+# exactly like the availability windows, so fault scenarios vmap across the
+# existing seed/lr sweep grid without recompiling.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FaultSchedule:
+    """Per-event fault descriptors for one run (runtime arrays — consumed by
+    the scan's guard pipeline and, identically, by
+    `StalenessSimulator(..., faults=...)`). ``kind[e]`` is a FAULT_* code
+    (NONE/NAN/EXPLODE/BYZANTINE/OVERSTALE — see repro/core/staleness_sim.py);
+    ``scale[e]`` is the norm multiplier an EXPLODE event applies."""
+    kind: jnp.ndarray       # (n_events,) int32 — FAULT_* code per event
+    scale: jnp.ndarray      # (n_events,) f32 — EXPLODE norm multiplier
+
+    @property
+    def n_events(self) -> int:
+        return int(self.kind.shape[0])
+
+    def counts(self):
+        """Host-side {kind-name: count} of scheduled (not yet fired) faults."""
+        k = np.asarray(self.kind)
+        return {"nan": int((k == FAULT_NAN).sum()),
+                "explode": int((k == FAULT_EXPLODE).sum()),
+                "byzantine": int((k == FAULT_BYZANTINE).sum()),
+                "overstale": int((k == FAULT_OVERSTALE).sum())}
+
+
+def no_faults(n_events: int) -> FaultSchedule:
+    """An all-clean schedule — runs the guard pipeline (clipping, natural
+    over-stale rejection) without injected faults."""
+    return FaultSchedule(jnp.zeros((n_events,), jnp.int32),
+                         jnp.ones((n_events,), jnp.float32))
+
+
+def build_fault_schedule(seed: int, n_events: int, *, nan_rate: float = 0.0,
+                         explode_rate: float = 0.0,
+                         byzantine_rate: float = 0.0,
+                         overstale_rate: float = 0.0,
+                         explode_scale: float = 1e4) -> FaultSchedule:
+    """Draw a per-event fault schedule from `seed` (fold_in 201 — disjoint
+    from the protocol randomness constants 101–103, so faulted and clean
+    runs share their gumbel/τ streams event-for-event). Each event
+    independently becomes one fault kind with the given rate: NAN poisons
+    the payload non-finite, EXPLODE multiplies its norm by `explode_scale`,
+    BYZANTINE flips its sign, OVERSTALE forces the staleness request past
+    tau_max. Rates must sum to ≤ 1."""
+    rates = (nan_rate, explode_rate, byzantine_rate, overstale_rate)
+    if min(rates) < 0 or sum(rates) > 1.0:
+        raise ValueError(f"fault rates must be ≥0 and sum to ≤1: {rates}")
+    u = jax.random.uniform(
+        jax.random.fold_in(jax.random.PRNGKey(seed), 201),
+        (n_events,), jnp.float32)
+    edges = np.concatenate([[0.0], np.cumsum(rates)])
+    kind = jnp.full((n_events,), FAULT_NONE, jnp.int32)
+    for code, lo, hi in zip(
+            (FAULT_NAN, FAULT_EXPLODE, FAULT_BYZANTINE, FAULT_OVERSTALE),
+            edges[:-1], edges[1:]):
+        kind = jnp.where(jnp.logical_and(u >= lo, u < hi), code, kind)
+    return FaultSchedule(kind,
+                         jnp.full((n_events,), explode_scale, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +349,9 @@ def _staleness_program(*, grad_fn: Callable, params0,
                        init_cache_grads: bool = True,
                        record_w: bool = False,
                        layout: str = "flat",
-                       history_dtype: str = "float32"):
+                       history_dtype: str = "float32",
+                       guards: bool = False,
+                       resync_every: Optional[int] = None):
     """The protocol as two pure functions: ``(init_fn, chunk_fn, marks)``.
 
     ``init_fn(key, lr) -> carry`` builds the initial scan carry (init-batch
@@ -290,7 +368,31 @@ def _staleness_program(*, grad_fn: Callable, params0,
     "tree" carries the params pytree, dispatches the aggregator onto its
     tree-cache path and stores the history ring as a per-leaf stacked tree
     buffer in ``history_dtype`` ("int8" opt-in — quantization error then
-    breaks the exact host-replay contract, by design)."""
+    breaks the exact host-replay contract, by design).
+
+    ``guards=True`` compiles the in-scan fault-guard pipeline and changes
+    the chunk signature to ``chunk_fn(carry, gumbels, tau_raw, leave_at,
+    rejoin_at, lr, fault_kind, fault_scale, clip_norm)`` — per-event fault
+    descriptors (`FaultSchedule` slices) and a runtime clip threshold ride
+    the scan exactly like the availability windows do. Per event: the
+    payload is fault-injected, then (1) **quarantine** — a non-finite
+    payload consumes the event without touching model, cache, running sums
+    or the ACED owner-ring; (2) **over-stale rejection** — a staleness
+    request past tau_max (injected or natural) is likewise dropped;
+    (3) **global-norm clip** — surviving payloads with ‖g‖ > clip_norm are
+    scaled to the threshold (clip_norm ≤ 0 disables). Counters ride the
+    carry (``carry["guards"]``) and per-event flags the outs, both gated on
+    the in-window live region (t < T and not frozen) so chunked totals
+    equal one-shot totals. With guards off the pipeline compiles to
+    nothing: signatures, carry and outs are bit-identical to pre-guard
+    builds.
+
+    ``resync_every`` (independent of guards) re-derives the aggregator's
+    incremental running sums from its cache (`Aggregator.resync`) on every
+    `resync_every`-th emitted update, under `jax.lax.cond` — O(n·d) only on
+    the cadence when unvmapped, so it belongs to the chunked/long-run path,
+    not the vmapped sweep grids (vmap lowers cond to select and would pay
+    the recompute every event)."""
     n = n_clients
     agg = aggregator
     tau_max = tau_max if tau_max is not None else default_tau_max(beta)
@@ -406,15 +508,22 @@ def _staleness_program(*, grad_fn: Callable, params0,
         if marks is not None:
             carry["snaps"] = init_snaps()
             carry["hits"] = jnp.zeros((marks.shape[0],), jnp.bool_)
+        if guards:
+            carry["guards"] = {k: jnp.zeros((), jnp.int32) for k in
+                               ("quarantined", "clipped", "rejected")}
         return carry
 
-    def chunk_fn(carry, gumbels, tau_raw, leave_at, rejoin_at, lr):
+    def _chunk_impl(carry, gumbels, tau_raw, leave_at, rejoin_at, lr,
+                    fault_kind, fault_scale, clip_norm):
         lr = jnp.asarray(lr, jnp.float32)
         leave_at = jnp.asarray(leave_at, jnp.int32)
         rejoin_at = jnp.asarray(rejoin_at, jnp.int32)
 
         def step(carry, ev):
-            g_row, traw = ev
+            if guards:
+                g_row, traw, f_kind, f_scale = ev
+            else:
+                g_row, traw = ev
             g_row = shard(g_row, ("cache_clients",))
             t = carry["t"]
             # availability: traced-t windows folded into the sampling logits
@@ -428,16 +537,61 @@ def _staleness_program(*, grad_fn: Callable, params0,
             thaw_t = jnp.minimum(
                 jnp.min(jnp.where(gone, rejoin_at, NEVER)), T)
             j = jnp.argmax(logits + g_row).astype(jnp.int32)
-            tau = jnp.minimum(jnp.floor(traw).astype(jnp.int32),
+            tau_req = jnp.floor(traw).astype(jnp.int32)
+            if guards:   # injected over-stale request; clamped for the read
+                tau_req = jnp.where(f_kind == FAULT_OVERSTALE, tau_max + 1,
+                                    tau_req)
+            tau = jnp.minimum(tau_req,
                               jnp.minimum(tau_max, carry["n_upd"]))
             w_stale = rd_ring(carry["ring"], carry["cursor"], tau)
             payload, loss, key = payload_fn(w_stale, j, carry["key"])
             payload = pin_payload(payload)
+            if guards:
+                # fault injection: one scalar multiplier covers NAN (payload
+                # goes non-finite), EXPLODE (norm blow-up by f_scale) and
+                # BYZANTINE (sign flip); clean events multiply by 1.0 — an
+                # f32 identity, so a no-fault guarded run tracks the
+                # unguarded trajectory exactly
+                mult = jnp.where(f_kind == FAULT_NAN, jnp.float32(jnp.nan),
+                                 jnp.float32(1.0))
+                mult = mult * jnp.where(f_kind == FAULT_EXPLODE, f_scale,
+                                        jnp.float32(1.0))
+                mult = jnp.where(f_kind == FAULT_BYZANTINE, -mult, mult)
+                payload = jax.tree.map(lambda p: p * mult, payload)
+                finite = jnp.asarray(True)
+                for leaf in jax.tree.leaves(payload):
+                    finite = jnp.logical_and(finite,
+                                             jnp.all(jnp.isfinite(leaf)))
+                gnorm = _tree_global_norm(payload)
+                # NaN gnorm compares False: a quarantined payload is never
+                # also counted as clipped
+                do_clip = jnp.logical_and(clip_norm > 0, gnorm > clip_norm)
+                cscale = jnp.where(
+                    do_clip, clip_norm / jnp.maximum(gnorm, 1e-12),
+                    jnp.float32(1.0))
+                payload = jax.tree.map(lambda p: p * cscale, payload)
+                reject = tau_req > tau_max
+                ok = jnp.logical_and(finite, jnp.logical_not(reject))
+                proc = jnp.logical_and(any_alive, ok)
+            else:
+                proc = any_alive
             state, u, emit, lr_scale = agg.step(
                 carry["state"], Arrival(j, payload, t, tau))
-            emit = jnp.logical_and(emit, jnp.logical_and(t < T, any_alive))
-            # frozen events perform no aggregator transition on the host
-            state = _select_tree(any_alive, state, carry["state"])
+            emit = jnp.logical_and(emit, jnp.logical_and(t < T, proc))
+            # frozen events perform no aggregator transition on the host —
+            # and neither do quarantined/rejected ones: the guarded select
+            # keeps cache, running sums and the ACED owner-ring untouched
+            # (jnp.where also stops any NaN from leaking out of the
+            # unselected branch)
+            state = _select_tree(proc, state, carry["state"])
+            n_upd_new = carry["n_upd"] + emit.astype(jnp.int32)
+            if resync_every:
+                # periodic exact self-heal of the incremental running sums
+                # (lax.cond: the O(n·d) recompute only runs on the cadence)
+                state = jax.lax.cond(
+                    jnp.logical_and(emit,
+                                    jnp.mod(n_upd_new, resync_every) == 0),
+                    agg.resync, lambda s: s, state)
             eta = lr_of_t(t, lr) * lr_scale
             w = apply_update(carry["w"], u, eta, emit)
             ring, cursor = ap_ring(carry["ring"], carry["cursor"], w, emit)
@@ -447,14 +601,44 @@ def _staleness_program(*, grad_fn: Callable, params0,
             if record_w:
                 out["w"] = w
             new_carry = {"w": w, "key": key, "state": state, "t": t_new,
-                         "n_upd": carry["n_upd"] + emit.astype(jnp.int32),
+                         "n_upd": n_upd_new,
                          "ring": ring, "cursor": cursor}
             if marks is not None:
                 new_carry["snaps"], new_carry["hits"] = snap_update(
                     carry["snaps"], carry["hits"], marks, t_new, emit, w)
+            if guards:
+                # counters gated on the live window (t < T, not frozen) so
+                # the padding tail/freezes never count and chunked totals
+                # equal the host loop's
+                win = jnp.logical_and(t < T, any_alive)
+                flags = {
+                    "quarantined": jnp.logical_and(win,
+                                                   jnp.logical_not(finite)),
+                    "rejected": jnp.logical_and(
+                        win, jnp.logical_and(finite, reject)),
+                    "clipped": jnp.logical_and(
+                        win, jnp.logical_and(ok, do_clip))}
+                out.update(flags)
+                new_carry["guards"] = {
+                    k: carry["guards"][k] + flags[k].astype(jnp.int32)
+                    for k in flags}
             return new_carry, out
 
-        return jax.lax.scan(step, carry, (gumbels, tau_raw))
+        xs = ((gumbels, tau_raw, fault_kind, fault_scale) if guards
+              else (gumbels, tau_raw))
+        return jax.lax.scan(step, carry, xs)
+
+    if guards:
+        def chunk_fn(carry, gumbels, tau_raw, leave_at, rejoin_at, lr,
+                     fault_kind, fault_scale, clip_norm):
+            return _chunk_impl(carry, gumbels, tau_raw, leave_at, rejoin_at,
+                               lr, jnp.asarray(fault_kind, jnp.int32),
+                               jnp.asarray(fault_scale, jnp.float32),
+                               jnp.asarray(clip_norm, jnp.float32))
+    else:
+        def chunk_fn(carry, gumbels, tau_raw, leave_at, rejoin_at, lr):
+            return _chunk_impl(carry, gumbels, tau_raw, leave_at, rejoin_at,
+                               lr, None, None, None)
 
     return init_fn, chunk_fn, marks
 
@@ -470,7 +654,9 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
                           init_cache_grads: bool = True,
                           record_w: bool = False,
                           layout: str = "flat",
-                          history_dtype: str = "float32"):
+                          history_dtype: str = "float32",
+                          guards: bool = False,
+                          resync_every: Optional[int] = None):
     """Build the jitted runner
     ``run(key, gumbels, tau_raw, leave_at, rejoin_at, lr)
           -> (w, state, outs, extras)``.
@@ -488,19 +674,24 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
     post-scan host evaluation. vmap the runner over stacked
     ``(key, gumbels, tau_raw, leave_at, rejoin_at, lr)`` for seed/grid/
     scenario sweeps. With ``layout="tree"``, `w` and the snapshots are
-    params pytrees instead of raveled vectors (see `_staleness_program`)."""
+    params pytrees instead of raveled vectors (see `_staleness_program`).
+    With ``guards=True`` the runner takes three trailing arguments
+    ``(..., fault_kind, fault_scale, clip_norm)`` (the `FaultSchedule`
+    arrays and a traced f32 clip threshold) and ``outs`` carries the
+    per-event quarantined/clipped/rejected flags."""
     init_fn, chunk_fn, marks = _staleness_program(
         grad_fn=grad_fn, params0=params0, aggregator=aggregator,
         n_clients=n_clients, T=T, beta=beta, server_lr=server_lr,
         tau_max=tau_max, speed_skew=speed_skew, eval_marks=eval_marks,
         local_steps=local_steps, local_lr=local_lr,
         init_cache_grads=init_cache_grads, record_w=record_w,
-        layout=layout, history_dtype=history_dtype)
+        layout=layout, history_dtype=history_dtype,
+        guards=guards, resync_every=resync_every)
 
-    def _run(key, gumbels, tau_raw, leave_at, rejoin_at, lr):
+    def _run(key, gumbels, tau_raw, leave_at, rejoin_at, lr, *guard_args):
         carry = init_fn(key, lr)
         carry, outs = chunk_fn(carry, gumbels, tau_raw, leave_at, rejoin_at,
-                               lr)
+                               lr, *guard_args)
         extras = {}
         if marks is not None:
             extras = {"snaps": carry["snaps"], "hits": carry["hits"]}
@@ -529,6 +720,11 @@ class ChunkedStalenessRunner:
     tau_max: int
     layout: str
     mesh: object = None
+    #: guard statics baked into `chunk` — with guards, chunk takes the three
+    #: trailing (fault_kind, fault_scale, clip_norm) arguments and the carry
+    #: holds the ``guards`` counter dict (checkpointed with the rest)
+    guards: bool = False
+    resync_every: Optional[int] = None
 
 
 def make_chunked_staleness_runner(*, mesh=None, **kwargs
@@ -542,22 +738,26 @@ def make_chunked_staleness_runner(*, mesh=None, **kwargs
     tau_max = kwargs.get("tau_max")
     if tau_max is None:
         tau_max = default_tau_max(kwargs["beta"])
+    guards = kwargs.get("guards", False)
+    resync_every = kwargs.get("resync_every")
     jit_init, jit_chunk = jax.jit(init_fn), jax.jit(chunk_fn)
     if mesh is None:
         return ChunkedStalenessRunner(jit_init, jit_chunk, marks, tau_max,
-                                      kwargs.get("layout", "flat"))
+                                      kwargs.get("layout", "flat"),
+                                      guards=guards,
+                                      resync_every=resync_every)
 
     def init(key, lr):
         with use_rules(mesh):
             return jit_init(key, lr)
 
-    def chunk(carry, gumbels, tau_raw, leave_at, rejoin_at, lr):
+    def chunk(carry, *args):
         with use_rules(mesh):
-            return jit_chunk(carry, gumbels, tau_raw, leave_at, rejoin_at,
-                             lr)
+            return jit_chunk(carry, *args)
 
     return ChunkedStalenessRunner(init, chunk, marks, tau_max,
-                                  kwargs.get("layout", "flat"), mesh)
+                                  kwargs.get("layout", "flat"), mesh,
+                                  guards=guards, resync_every=resync_every)
 
 
 def _window_slack(n_clients: int, rejoin_at, windows) -> int:
@@ -589,7 +789,10 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        local_lr: float = 0.05, init_cache_grads: bool = True,
                        seed: int = 0, record_w: bool = False,
                        mesh=None, layout: str = "flat",
-                       history_dtype: str = "float32") -> ScanResult:
+                       history_dtype: str = "float32",
+                       faults: Optional[FaultSchedule] = None,
+                       clip_norm: float = 0.0,
+                       resync_every: Optional[int] = None) -> ScanResult:
     """One device-resident run, trajectory-equivalent to
     ``StalenessSimulator(..., replay=build_staleness_randomness(seed, ...))``
     given the same arguments — including the eval cadence: with `eval_fn` and
@@ -598,7 +801,17 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
     GSPMD variant (repro/core/scan_sharded.py) — same trajectory ≤1e-5.
     With ``layout="tree"``, `grad_fn` takes the params pytree (no ravel on
     the hot path) and `ScanResult.w` is the raveled final model — the same
-    ≤1e-5 contract vs the flat/host paths holds for the f32 history ring."""
+    ≤1e-5 contract vs the flat/host paths holds for the f32 history ring.
+    ``faults`` (a `FaultSchedule`) / ``clip_norm`` turn on the guard
+    pipeline (same semantics as `StalenessSimulator(faults=..., ...)` — the
+    ≤1e-5 replay contract extends to faulted runs); ``resync_every``
+    enables the periodic exact recompute of incremental aggregator sums."""
+    guards = faults is not None or clip_norm > 0
+    if faults is not None:
+        if n_events is not None and n_events != faults.n_events:
+            raise ValueError(
+                f"n_events={n_events} != faults.n_events={faults.n_events}")
+        n_events = faults.n_events
     if n_events is None:
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
@@ -615,11 +828,16 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
         tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
         local_steps=local_steps, local_lr=local_lr,
         init_cache_grads=init_cache_grads, record_w=record_w,
-        layout=layout, history_dtype=history_dtype)
+        layout=layout, history_dtype=history_dtype,
+        guards=guards, resync_every=resync_every)
     lr = jnp.float32(0.0 if callable(server_lr) else server_lr)
+    guard_args = ()
+    if guards:
+        fa = faults if faults is not None else no_faults(n_events)
+        guard_args = (fa.kind, fa.scale, jnp.float32(clip_norm))
     w, _, outs, extras = runner(jax.random.PRNGKey(seed), rand.gumbels,
                                 rand.tau_raw, rand.leave_at, rand.rejoin_at,
-                                lr)
+                                lr, *guard_args)
     if layout == "tree":
         w = ravel_pytree(w)[0]
     evals, eval_ts = [], []
@@ -678,14 +896,23 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
                         eval_every: Optional[int] = None,
                         n_events: Optional[int] = None, local_steps: int = 1,
                         local_lr: float = 0.05, init_cache_grads: bool = True,
-                        runner=None, mesh=None) -> List[ScanResult]:
+                        runner=None, mesh=None,
+                        fault_rates: Optional[Dict[str, float]] = None,
+                        clip_norm: float = 0.0,
+                        resync_every: Optional[int] = None
+                        ) -> List[ScanResult]:
     """vmap one compiled runner over seeds — the whole batch of staleness
     trajectories is one XLA computation. Pass `runner` (a
     `make_staleness_runner` result with matching statics, including
     `eval_marks` when `eval_fn`/`eval_every` are given) to reuse a compiled
     runner across calls, e.g. across an lr grid. With `mesh`, the runner is
     the sharded variant (repro/core/scan_sharded.py) and every per-run cache/
-    ring/snapshot buffer lays out over the (data, model) mesh."""
+    ring/snapshot buffer lays out over the (data, model) mesh.
+    ``fault_rates`` (kwargs for `build_fault_schedule`, per-seed schedules) /
+    ``clip_norm`` turn on the guard pipeline; ``resync_every`` the periodic
+    incremental-state recompute. A passed-in `runner` must have matching
+    `guards`/`resync_every` statics."""
+    guards = bool(fault_rates) or clip_norm > 0
     if n_events is None:
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
@@ -702,10 +929,20 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
             server_lr=server_lr if callable(server_lr) else None,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
-            init_cache_grads=init_cache_grads)
+            init_cache_grads=init_cache_grads,
+            guards=guards, resync_every=resync_every)
     lr = 0.0 if callable(server_lr) else float(server_lr)
     lrs = jnp.full((len(seeds),), lr, jnp.float32)
-    ws, _, outs, extras = jax.vmap(runner)(*batch, lrs)
+    guard_batch = ()
+    if guards:
+        # per-seed fault schedules: seed s draws its own schedule, so the
+        # sweep covers schedule variation exactly like the randomness streams
+        fas = [build_fault_schedule(s, n_events, **(fault_rates or {}))
+               for s in seeds]
+        guard_batch = (jnp.stack([f.kind for f in fas]),
+                       jnp.stack([f.scale for f in fas]),
+                       jnp.full((len(seeds),), clip_norm, jnp.float32))
+    ws, _, outs, extras = jax.vmap(runner)(*batch, lrs, *guard_batch)
     wants_init = init_cache_grads and wants_cache_init(aggregator)
     return _staleness_results(ws, outs, extras, len(seeds), T,
                               n_clients if wants_init else 0,
@@ -723,11 +960,19 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        eval_every: Optional[int] = None,
                        n_events: Optional[int] = None, local_steps: int = 1,
                        local_lr: float = 0.05, init_cache_grads: bool = True,
-                       runner=None, mesh=None) -> List[List[ScanResult]]:
+                       runner=None, mesh=None,
+                       fault_rates: Optional[Dict[str, float]] = None,
+                       clip_norm: float = 0.0,
+                       resync_every: Optional[int] = None
+                       ) -> List[List[ScanResult]]:
     """The lr-tuning grid × seed sweep as ONE vmapped computation: per-seed
     randomness is tiled across the lr axis (same trajectories, different
     step sizes — exactly the host grid in benchmarks/common.py `tuned`).
-    Returns ``results[i_lr][i_seed]``. `mesh` picks the sharded runner."""
+    Returns ``results[i_lr][i_seed]``. `mesh` picks the sharded runner.
+    ``fault_rates``/``clip_norm``/``resync_every`` as in
+    `run_staleness_seeds` — per-seed schedules broadcast across the lr axis
+    like the rest of the randomness."""
+    guards = bool(fault_rates) or clip_norm > 0
     if n_events is None:
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
@@ -744,14 +989,25 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
             n_clients=n_clients, T=T, beta=beta,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
-            init_cache_grads=init_cache_grads)
+            init_cache_grads=init_cache_grads,
+            guards=guards, resync_every=resync_every)
+    guard_batch, g_in, g_out = (), (), ()
+    if guards:
+        fas = [build_fault_schedule(s, n_events, **(fault_rates or {}))
+               for s in seeds]
+        guard_batch = (jnp.stack([f.kind for f in fas]),
+                       jnp.stack([f.scale for f in fas]),
+                       jnp.full((ns,), clip_norm, jnp.float32))
+        g_in, g_out = (0, 0, 0), (None, None, None)
     # nested vmap: the lr axis broadcasts the per-seed randomness
     # (in_axes=None) instead of host-materialising L copies of the
     # (ns, n_events, n) gumbel stack — the (n_events, n) rows are stored
     # once per seed, not once per (lr, seed) grid cell
-    grid_run = jax.vmap(jax.vmap(runner, in_axes=(0, 0, 0, 0, 0, None)),
-                        in_axes=(None, None, None, None, None, 0))
-    ws, _, outs, extras = grid_run(*batch, jnp.asarray(lrs, jnp.float32))
+    grid_run = jax.vmap(
+        jax.vmap(runner, in_axes=(0, 0, 0, 0, 0, None) + g_in),
+        in_axes=(None, None, None, None, None, 0) + g_out)
+    ws, _, outs, extras = grid_run(*batch, jnp.asarray(lrs, jnp.float32),
+                                   *guard_batch)
     # flatten (L, ns, ...) -> (L*ns, ...): cell i*ns+j is (lr i, seed j)
     flat2 = lambda x: x.reshape((L * ns,) + x.shape[2:])
     ws = flat2(ws)

@@ -36,6 +36,9 @@ class SimResult:
     eval_ts: List[int]
     total_comms: int
     update_norms: List[float]
+    #: guard-pipeline counters (quarantined/clipped/rejected) — populated by
+    #: the staleness simulator when fault guards are on, else empty
+    faults: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def final_eval(self):
         return self.evals[-1] if self.evals else {}

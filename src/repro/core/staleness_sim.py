@@ -30,6 +30,19 @@ from repro.core.simulator import SimResult
 #: the scanned engine (repro/core/scan_staleness.py re-exports it).
 NEVER: int = int(np.iinfo(np.int32).max)
 
+#: per-event fault kinds (shared with the scanned engine, which re-exports
+#: them next to `FaultSchedule`): NONE passes the payload through; NAN
+#: poisons it with a non-finite multiplier (quarantined by the guard
+#: pipeline); EXPLODE scales it by the schedule's per-event scale (caught by
+#: global-norm clipping); BYZANTINE flips its sign (an adversarial but
+#: finite update — clipped, never quarantined); OVERSTALE forces the
+#: requested staleness past tau_max (rejected by the over-stale guard).
+FAULT_NONE: int = 0
+FAULT_NAN: int = 1
+FAULT_EXPLODE: int = 2
+FAULT_BYZANTINE: int = 3
+FAULT_OVERSTALE: int = 4
+
 
 def default_tau_max(beta: float) -> int:
     """History bound when none is given — shared by the host simulator and
@@ -58,7 +71,9 @@ class StalenessSimulator:
                  eval_fn: Optional[Callable] = None, eval_every: int = 50,
                  dropout_frac: float = 0.0, dropout_at: Optional[int] = None,
                  rejoin_at: Optional[int] = None, windows=None,
-                 init_cache_grads: bool = True, seed: int = 0, replay=None):
+                 init_cache_grads: bool = True, seed: int = 0, replay=None,
+                 faults=None, clip_norm: float = 0.0,
+                 resync_every: Optional[int] = None):
         """`replay` (duck-typed `StalenessRandomness`: .gumbels (E, n),
         .tau_raw (E,), .leave_at (n,), .rejoin_at (n,)) switches the
         protocol's random draws from this instance's numpy RNG to a
@@ -73,7 +88,19 @@ class StalenessSimulator:
         `dropout_frac`/`dropout_at` trigger draws the leaving set from
         `self.rng` once when t first reaches `dropout_at` (plus optional
         scalar `rejoin_at` for a leave/re-join scenario); permanent dropout
-        is the `rejoin_at=None` special case."""
+        is the `rejoin_at=None` special case.
+
+        Fault guards (mirroring the scanned engine's in-scan pipeline, so
+        the ≤1e-5 replay contract holds under faults): `faults` is a
+        duck-typed `FaultSchedule` (.kind (E,) int32 of FAULT_* codes,
+        .scale (E,) f32) indexed by the event cursor — NAN faults are
+        quarantined (the event is consumed without touching model,
+        aggregator state or history), EXPLODE/BYZANTINE payloads pass
+        through global-norm clipping when `clip_norm > 0`, OVERSTALE events
+        (and natural draws past tau_max while guards are on) are rejected.
+        `resync_every` re-derives the aggregator's incremental running sums
+        from its cache every that many emitted updates
+        (`Aggregator.resync`). Counters land on ``SimResult.faults``."""
         self.grad_fn = grad_fn
         flat, self.unravel = ravel_pytree(params0)
         self.w = np.asarray(flat, np.float32)
@@ -95,6 +122,9 @@ class StalenessSimulator:
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self.replay = replay
+        self.faults = faults
+        self.clip_norm = float(clip_norm)
+        self.resync_every = resync_every
         self.client_probs = staleness_client_probs(n_clients, speed_skew)
         # f32 logits matching the device scan bit-for-bit (argmax ties)
         self._log_probs = np.log(self.client_probs).astype(np.float32)
@@ -138,6 +168,14 @@ class StalenessSimulator:
             r_gumbels = np.asarray(replay.gumbels, np.float32)
             r_tau_raw = np.asarray(replay.tau_raw, np.float32)
             n_replay = r_tau_raw.shape[0]
+        # fault guards: mirror the scanned guard pipeline event-for-event
+        guards_on = self.faults is not None or self.clip_norm > 0
+        f_kind = f_scale = None
+        if self.faults is not None:
+            f_kind = np.asarray(self.faults.kind, np.int64)
+            f_scale = np.asarray(self.faults.scale, np.float32)
+        n_quarantined = n_clipped = n_rejected = 0
+        n_upd = t                               # emitted-update counter
         # availability windows: client i is unavailable while
         # leave_at[i] <= t < rejoin_at[i]
         if self.windows is not None:
@@ -174,8 +212,11 @@ class StalenessSimulator:
                 # The scan burns exactly one event for this jump; mirror its
                 # randomness use so the streams stay aligned through the thaw.
                 if replay is not None:
-                    tau = min(int(r_tau_raw[e]), self.tau_max,
-                              len(history) - 1)
+                    tau_req = int(r_tau_raw[e])
+                    if f_kind is not None and f_kind[e] == FAULT_OVERSTALE:
+                        tau_req = self.tau_max + 1   # injected request; the
+                        # scan clamps it identically before the frozen read
+                    tau = min(tau_req, self.tau_max, len(history) - 1)
                     self._payload(history[-(tau + 1)], 0)  # key-chain parity
                 e += 1
                 t = int(min(rejoin_at.min(), T))
@@ -186,7 +227,7 @@ class StalenessSimulator:
                 logits = np.where(gone, -np.inf,
                                   self._log_probs).astype(np.float32)
                 j = int(np.argmax(logits + r_gumbels[e]))
-                tau = min(int(r_tau_raw[e]), self.tau_max, len(history) - 1)
+                tau_req = int(r_tau_raw[e])
             else:
                 if gone.any():
                     alive = np.where(gone, 0.0, self.client_probs)
@@ -194,12 +235,40 @@ class StalenessSimulator:
                 else:      # bit-identical to the pre-windows draw
                     probs = self.client_probs
                 j = int(self.rng.choice(n, p=probs))
-                tau = min(int(self.rng.exponential(self.beta)),
-                          self.tau_max, len(history) - 1)
+                tau_req = int(self.rng.exponential(self.beta))
+            kind, fscale = FAULT_NONE, np.float32(1.0)
+            if f_kind is not None and e < f_kind.shape[0]:
+                kind, fscale = int(f_kind[e]), f_scale[e]
+            if kind == FAULT_OVERSTALE:
+                tau_req = self.tau_max + 1
+            tau = min(tau_req, self.tau_max, len(history) - 1)
             e += 1
             w_stale = history[-(tau + 1)]
             payload, loss = self._payload(w_stale, j)
             total_comms += 1
+            if guards_on:
+                # same multiplier chain as the traced injection (f32 exact:
+                # a no-fault event multiplies by 1.0, an identity)
+                mult = np.float32(np.nan) if kind == FAULT_NAN \
+                    else np.float32(1.0)
+                if kind == FAULT_EXPLODE:
+                    mult = np.float32(mult * fscale)
+                if kind == FAULT_BYZANTINE:
+                    mult = np.float32(-mult)
+                payload = payload * mult
+                if not np.isfinite(payload).all():
+                    n_quarantined += 1     # event consumed; nothing touched
+                    continue
+                if tau_req > self.tau_max:
+                    n_rejected += 1        # over-stale: reject post-payload
+                    continue               # (key-chain parity preserved)
+                if self.clip_norm > 0:
+                    gnorm = np.sqrt(np.sum(np.square(payload),
+                                           dtype=np.float32))
+                    if gnorm > np.float32(self.clip_norm):
+                        payload = payload * (np.float32(self.clip_norm)
+                                             / max(gnorm, np.float32(1e-12)))
+                        n_clipped += 1
             state, update, lr_scale = self.agg.on_arrival(
                 state, Arrival(j, jnp.asarray(payload), t, tau))
             if update is not None:
@@ -210,8 +279,17 @@ class StalenessSimulator:
                 res.losses.append(loss)
                 res.update_norms.append(float(np.linalg.norm(np.asarray(update))))
                 t += 1
+                n_upd += 1
+                if self.resync_every and n_upd % self.resync_every == 0:
+                    # periodic exact self-heal of the incremental running
+                    # sums from the cache — same cadence as the scan's
+                    # lax.cond resync (emitted steps, not events)
+                    state = self.agg.resync(state)
                 if self.eval_fn and (t % self.eval_every == 0 or t == T):
                     res.evals.append(self.eval_fn(self.unravel(jnp.asarray(self.w))))
                     res.eval_ts.append(t)
         res.total_comms = total_comms
+        if guards_on:
+            res.faults = {"quarantined": n_quarantined, "clipped": n_clipped,
+                          "rejected": n_rejected}
         return res

@@ -35,7 +35,8 @@ from repro.configs.registry import afl_config, get_config
 from repro.core.aggregators import make_aggregator
 from repro.core.fl_tasks import make_lm_task
 from repro.core.scan_engine import default_n_events
-from repro.core.scan_staleness import (build_staleness_randomness,
+from repro.core.scan_staleness import (build_fault_schedule,
+                                       build_staleness_randomness,
                                        make_chunked_staleness_runner)
 from repro.core.scan_sharded import staleness_mesh
 from repro.core.staleness_sim import StalenessSimulator, default_tau_max
@@ -81,6 +82,25 @@ def _parser() -> argparse.ArgumentParser:
                     "boundaries)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    # --- fault injection / guard pipeline --------------------------------
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="global-norm clip threshold for client payloads "
+                    "(0 disables; >0 turns the guard pipeline on)")
+    ap.add_argument("--fault-nan-rate", type=float, default=0.0,
+                    help="fraction of events injected with NaN payloads "
+                    "(quarantined by the guard pipeline)")
+    ap.add_argument("--fault-explode-rate", type=float, default=0.0,
+                    help="fraction of events with norm-exploded payloads")
+    ap.add_argument("--fault-byzantine-rate", type=float, default=0.0,
+                    help="fraction of events with sign-flipped payloads")
+    ap.add_argument("--fault-overstale-rate", type=float, default=0.0,
+                    help="fraction of events arriving with tau > tau_max "
+                    "(rejected by the guard pipeline)")
+    ap.add_argument("--fault-explode-scale", type=float, default=1e4,
+                    help="norm multiplier for explode faults")
+    ap.add_argument("--resync-every", type=int, default=0,
+                    help="emitted updates between exact recomputes of the "
+                    "incremental ACED/CA2FL running sums (0 disables)")
     return ap
 
 
@@ -117,21 +137,45 @@ def _run(args) -> float:
     T = args.steps
     server_lr = sqrt_nt_schedule(args.lr_scale, aflc.n_clients, T)
     tau_max = default_tau_max(args.beta)
+    fault_rates = {"nan_rate": args.fault_nan_rate,
+                   "explode_rate": args.fault_explode_rate,
+                   "byzantine_rate": args.fault_byzantine_rate,
+                   "overstale_rate": args.fault_overstale_rate}
+    any_faults = any(r > 0 for r in fault_rates.values())
+    guards = any_faults or args.clip_norm > 0
     n_events = default_n_events(agg, T, True)
+    if any_faults:
+        # quarantined/rejected events never emit: pad the event budget so
+        # the run still reaches T server iterations in expectation
+        drop = args.fault_nan_rate + args.fault_overstale_rate
+        n_events = int(np.ceil(n_events / max(1.0 - drop, 0.5))) + 16
     C = max(1, args.chunk_events)
     n_pad = -(-n_events // C) * C    # chunk multiple; tail events are
     # harmless padding (emit is gated on t < T, model and state freeze)
     rand = build_staleness_randomness(args.seed, n_pad, aflc.n_clients,
                                       args.beta, speed_skew=args.speed_skew)
+    faults = None
+    if guards:
+        faults = build_fault_schedule(
+            args.seed, n_pad, explode_scale=args.fault_explode_scale,
+            **fault_rates)
+        kinds = faults.counts()
+        print(f"guards on: clip_norm={args.clip_norm} "
+              f"resync_every={args.resync_every or 'off'} "
+              f"injected={kinds}")
+    resync_every = args.resync_every or None
 
     if args.driver == "host":
         sim = StalenessSimulator(
             grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
             n_clients=aflc.n_clients, server_lr=server_lr, beta=args.beta,
             tau_max=tau_max, speed_skew=args.speed_skew, seed=args.seed,
-            replay=rand)
+            replay=rand, faults=faults, clip_norm=args.clip_norm,
+            resync_every=resync_every)
         res = sim.run(T)
         final = float(np.mean(res.losses[-20:]))
+        if res.faults:
+            print(f"guard counters: {res.faults}")
         print(f"final loss (mean last 20): {final:.4f}")
         return final
 
@@ -140,7 +184,8 @@ def _run(args) -> float:
         mesh=mesh, grad_fn=task.grad_fn, params0=task.params0,
         aggregator=agg, n_clients=aflc.n_clients, T=T, beta=args.beta,
         server_lr=server_lr, tau_max=tau_max, speed_skew=args.speed_skew,
-        layout="tree", history_dtype=args.history_dtype)
+        layout="tree", history_dtype=args.history_dtype,
+        guards=guards, resync_every=resync_every)
 
     lr0 = jnp.float32(0.0)   # schedule baked in; runtime lr unused
     carry = runner.init(jax.random.PRNGKey(args.seed), lr0)
@@ -156,9 +201,13 @@ def _run(args) -> float:
     events_done, last_log = 0, 0
     for lo in range(e0, n_pad, C):
         hi = lo + C
+        guard_args = ()
+        if guards:
+            guard_args = (faults.kind[lo:hi], faults.scale[lo:hi],
+                          jnp.float32(args.clip_norm))
         carry, outs = runner.chunk(carry, rand.gumbels[lo:hi],
                                    rand.tau_raw[lo:hi], rand.leave_at,
-                                   rand.rejoin_at, lr0)
+                                   rand.rejoin_at, lr0, *guard_args)
         em = np.asarray(outs["emit"])
         losses.extend(np.asarray(outs["loss"])[em].tolist())
         events_done += C
@@ -176,6 +225,9 @@ def _run(args) -> float:
             break
 
     ev = task.eval_fn(carry["w"])
+    if guards:
+        counters = {k: int(v) for k, v in carry["guards"].items()}
+        print(f"guard counters: {counters}")
     # resumed past the event budget => no fresh losses; report eval loss
     final = float(np.mean(losses[-20:])) if losses else ev["loss"]
     print(f"final loss (mean last 20): {final:.4f}  eval={ev}")

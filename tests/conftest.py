@@ -34,6 +34,10 @@ def pytest_configure(config):
         "markers",
         "multidevice: needs an 8-way device mesh "
         "(run with REPRO_FORCE_DEVICES=8; skipped otherwise)")
+    config.addinivalue_line(
+        "markers",
+        "faults: fault-injection / guard-pipeline / crash-safety tests "
+        "(ISSUE 7); CI runs them as a dedicated job via `-m faults`")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -22,14 +22,18 @@ explicit Mesh to control the layout.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.core.aggregators import (ACED, ACEDirect, ACEIncremental, CA2FL,
-                                    DelayAdaptiveASGD, FedBuff, VanillaASGD)
+from repro.core.aggregators import (ACED,
+                                    ACEIncremental,
+                                    CA2FL,
+                                    DelayAdaptiveASGD,
+                                    FedBuff,
+                                    VanillaASGD)
 from repro.core.scan_sharded import (make_sharded_staleness_runner,
                                      staleness_mesh)
 from repro.core.scan_staleness import (eval_marks_for, make_staleness_runner,

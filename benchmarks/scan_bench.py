@@ -404,15 +404,66 @@ def _guard_rows(fast=True):
     return rows
 
 
+def _checkify_rows(fast=True):
+    """Checkify sanitizer gate (repro/core/sanitize): with the invariant
+    checks OFF (the default), the runner must be BIT-identical to a build
+    that never imported the sanitizers — `checkify_invariants=False` traces
+    zero extra ops, so dev is gated at exactly 0.0, not 1e-5. The checked
+    build is timed alongside for the debug-mode overhead number (clean run:
+    every invariant passes, nothing throws)."""
+    n, T, d, beta, seed, lr = 100, 300 if fast else 500, 1024, 5.0, 0, 0.05
+    grad_fn = _quad_grad_fn(n, d, sigma=0.0)
+    n_events = default_n_events(ACEIncremental(), T)
+    rand = build_staleness_randomness(seed, n_events, n, beta)
+    args = (jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
+            rand.leave_at, rand.rejoin_at, jnp.float32(lr))
+    out = {}
+    for tag, flag in (("off", False), ("on", True)):
+        runner = make_staleness_runner(
+            grad_fn=grad_fn, params0=jnp.zeros(d), aggregator=ACEIncremental(),
+            n_clients=n, T=T, beta=beta, resync_every=50,
+            checkify_invariants=flag)
+        t0 = time.time()
+        jax.block_until_ready(runner(*args)[0])
+        compile_s = time.time() - t0
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.time()
+            res = runner(*args)
+            jax.block_until_ready(res[0])
+            best = min(best, time.time() - t0)
+        out[tag] = (best, res, compile_s)
+    w_off = np.asarray(out["off"][1][0])
+    w_on = np.asarray(out["on"][1][0])
+    dev = float(np.max(np.abs(w_on - w_off)))
+    off_s, on_s = out["off"][0], out["on"][0]
+    overhead = on_s / max(off_s, 1e-9)
+    if dev != 0.0:
+        raise AssertionError(
+            f"checkify-off runner is not bit-identical to the checked "
+            f"build's trajectory: dev={dev:.2e} (the sanitizers must only "
+            f"observe)")
+    return [
+        {"bench": "scan_bench", "algo": "staleness_checkify_on",
+         "events_per_sec": n_events / max(on_s, 1e-9), "wall_s": on_s,
+         "compile_s": out["on"][2], "n_clients": n, "d": d,
+         "overhead_vs_off": overhead, "max_dev_vs_off": dev,
+         "derived": f"overhead={overhead:.2f}x_dev={dev:.1e}"},
+    ]
+
+
 def main(fast=True, write_json=True):
     rows = (_event_rows(fast) + _staleness_rows(fast) + _rule_rows(fast)
-            + _train_scan_rows(fast) + _guard_rows(fast))
+            + _train_scan_rows(fast) + _guard_rows(fast)
+            + _checkify_rows(fast))
     if write_json:
         payload = {"workloads": {
             "event": "100-client x 500-iter ACE quadratic",
             "staleness": "50-client x 400-iter ACE vision",
             "train_scan": "4-client x 30-iter reduced-yi LM (tree layout)",
-            "guards": "100-client x 300-iter ACE quadratic, clean schedule"},
+            "guards": "100-client x 300-iter ACE quadratic, clean schedule",
+            "checkify": "100-client x 300-iter ACE quadratic, sanitizers "
+                        "on vs off (off must be bit-identical)"},
             "fast": fast, "backend": jax.default_backend(), "rows": rows}
         with open(BENCH_JSON, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)

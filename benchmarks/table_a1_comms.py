@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import json
 
-import numpy as np
 
 from benchmarks.common import algo_suite, tuned
 from repro.core.delays import ExponentialDelays

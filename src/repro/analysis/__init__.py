@@ -1,0 +1,43 @@
+"""tracecheck — trace-safety / sharding-contract static analyzer.
+
+The three-tier AFL engine (host reference → device scan → sharded scan)
+keeps its ≤1e-5 replay contract only because a family of invariants is
+honoured everywhere traced code is written: no host syncs on tracers, PRNG
+keys never consumed twice, dtypes pinned in `core/`, cache/ring/snapshot
+writes routed through the mesh-context sharding helpers, runner-cache keys
+covering every static. Each of those was a real bug class in a past PR
+(trace-safety sweep, `_RUNNER_CACHE` key, SPMD miscompile, guard pipeline);
+this package turns the conventions into a mechanically-enforced contract.
+
+Pure stdlib (`ast`) — importable and runnable without JAX installed, so the
+CI `lint` job needs no device deps. Entry points::
+
+    python -m repro.analysis [paths...]      # or the repro-tracecheck script
+
+Rules (each suppressible in source via ``# tracecheck: ignore[RULE]`` on the
+offending line, and grandfatherable via the committed baseline file):
+
+  TRC001  host-sync hazards in jit/scan-reachable code — ``float()`` /
+          ``int()`` / ``bool()`` / ``.item()`` / ``np.asarray`` on
+          tracer-flowing values, Python ``if``/``while`` on values derived
+          from carry/payload parameters.
+  TRC002  RNG hygiene — a `jax.random` key consumed by two primitives
+          without an intervening ``split``/``fold_in``; host RNG
+          (`np.random` / `random`) inside traced bodies.
+  TRC003  dtype drift — float literals exceeding f32 precision in
+          arithmetic with traced values; missing explicit ``dtype`` on
+          ``jnp.zeros/ones/full/empty/arange`` in ``core/``.
+  TRC004  sharding-contract breaks — functions in the sharding-contract
+          modules (core/cache.py, core/scan_sharded.py,
+          core/distributed.py) that write cache/ring/snapshot buffers
+          without routing any result through the mesh-context constraint
+          helpers (``shard``/``replicate``).
+  TRC005  runner-cache-key completeness — memoised runner factories whose
+          cache key misses one of their static parameters (the PR 3
+          `_RUNNER_CACHE` bug class).
+"""
+from repro.analysis.core import (Finding, RULES, load_baseline, run_tracecheck,
+                                 write_baseline)
+
+__all__ = ["Finding", "RULES", "load_baseline", "run_tracecheck",
+           "write_baseline"]

@@ -1,0 +1,276 @@
+"""TRC003 (dtype drift), TRC004 (sharding contract), TRC005 (cache keys).
+
+These are *structural* contracts — unlike TRC001/TRC002 they mostly key off
+module location and code shape rather than taint flow:
+
+  * TRC003 pins the repo's x32 dtype policy inside ``core/`` and traced
+    arithmetic everywhere;
+  * TRC004 enforces that cache/ring/snapshot buffer producers in the
+    sharding-contract modules route through ``shard()``/``replicate()``
+    (the PR 4 SPMD-miscompile class);
+  * TRC005 re-finds the PR 3 `_RUNNER_CACHE` bug shape statically: a
+    memoised factory whose cache key misses one of its parameters.
+"""
+from __future__ import annotations
+
+import ast
+import struct
+from typing import List, Set
+
+from repro.analysis.core import Finding
+from repro.analysis.traceinfo import FuncInfo, Index, iter_own
+
+# -- TRC003: dtype drift -----------------------------------------------------
+
+#: jnp constructors that default to a dtype unless pinned
+_DTYPE_CTORS = {"zeros", "ones", "full", "empty", "arange"}
+
+
+def _beyond_f32(value: float) -> bool:
+    """True when a float literal can't survive an f32 round-trip — i.e. the
+    author wrote more precision (or range) than the traced arithmetic will
+    keep, which silently differs between x32 and x64 builds."""
+    if value == 0.0 or value != value:      # 0 / nan are representable
+        return False
+    try:
+        rt = struct.unpack("<f", struct.pack("<f", value))[0]
+    except (OverflowError, struct.error):
+        return True                         # overflows f32 entirely
+    if rt in (float("inf"), float("-inf")):
+        return True
+    if rt == value:
+        return False
+    # round-trip moved the value: only flag when the author visibly asked
+    # for the extra digits (repr longer than f32's 9 significant digits)
+    digits = sum(c.isdigit() for c in repr(value).split("e")[0])
+    return digits > 9
+
+
+def check_dtype_drift(index: Index) -> List[Finding]:
+    out: List[Finding] = []
+    for fi in index.traced_functions():
+        tainted = index.tainted_names(fi)
+        mod = fi.module
+        for node in iter_own(fi.node):
+            if not isinstance(node, ast.BinOp):
+                continue
+            for lit, other in ((node.left, node.right),
+                               (node.right, node.left)):
+                if isinstance(lit, ast.Constant) \
+                        and isinstance(lit.value, float) \
+                        and _beyond_f32(lit.value) \
+                        and index.expr_tainted(fi, other, tainted):
+                    out.append(mod.finding(
+                        node, "TRC003",
+                        f"float literal {lit.value!r} exceeds f32 in "
+                        f"arithmetic with traced values in "
+                        f"'{fi.qualname}' — it will be silently rounded"))
+    # missing dtype= on buffer constructors anywhere under core/
+    for mod in index.modules:
+        if "/core/" not in f"/{mod.relpath}" \
+                and not mod.relpath.startswith("core/"):
+            continue
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _DTYPE_CTORS):
+                continue
+            dotted = index.jaxy_module(mod, node.func)
+            if dotted is None or not dotted.startswith("jax"):
+                continue
+            kwargs = {k.arg for k in node.keywords}
+            # dtype may be keyword or fill the positional dtype slot:
+            # zeros/ones/empty(shape, dtype), full(shape, fill, dtype);
+            # arange's positional dtype (4th) is ambiguous with step — only
+            # the keyword counts there
+            slot = {"full": 3}.get(node.func.attr,
+                                   4 if node.func.attr == "arange" else 2)
+            if "dtype" not in kwargs and len(node.args) < slot:
+                out.append(mod.finding(
+                    node, "TRC003",
+                    f"jnp.{node.func.attr}(...) without explicit dtype= in "
+                    f"core/ — default dtype drifts with the x64 flag"))
+    return out
+
+
+# -- TRC004: sharding-contract breaks ---------------------------------------
+
+_CONTRACT_MODULES = ("core/cache.py", "core/scan_sharded.py",
+                     "core/distributed.py")
+#: what makes a function a cache/ring/snapshot *buffer producer*
+_BUFFER_WORDS = ("cache", "ring", "snap", "history", "buf")
+_SHARD_HELPERS = {"shard", "replicate", "with_sharding_constraint",
+                  "logical_to_spec"}
+
+
+def check_sharding_contract(index: Index) -> List[Finding]:
+    out: List[Finding] = []
+    for fi in index.funcs.values():
+        rel = fi.module.relpath
+        if not any(rel.endswith(m) for m in _CONTRACT_MODULES):
+            continue
+        if fi.parent is not None:
+            continue        # judged at the top-level function granularity
+        if not _produces_buffers(index, fi):
+            continue
+        if _routes_through_shard(fi):
+            continue
+        out.append(fi.module.finding(
+            fi.node, "TRC004",
+            f"'{fi.qualname}' produces cache/ring/snapshot buffers but "
+            f"never routes through shard()/replicate() — under a mesh the "
+            f"result's layout is unconstrained (SPMD-miscompile class)"))
+    return out
+
+
+def _produces_buffers(index: Index, fi: FuncInfo) -> bool:
+    name_is_buffery = any(w in fi.name.lower() for w in _BUFFER_WORDS)
+    for node in ast.walk(fi.node):
+        # jnp.zeros/ones/... constructing a named buffer, or .at[...] writes
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute):
+            if node.func.attr in ("set", "add", "multiply", "min", "max") \
+                    and isinstance(node.func.value, ast.Subscript) \
+                    and isinstance(node.func.value.value, ast.Attribute) \
+                    and node.func.value.value.attr == "at":
+                if name_is_buffery or _mentions_buffer_name(
+                        node.func.value.value.value):
+                    return True
+            elif node.func.attr in _DTYPE_CTORS | {"zeros_like",
+                                                   "empty_like",
+                                                   "full_like"} \
+                    and index.jaxy_module(fi.module, node.func):
+                if name_is_buffery:
+                    return True
+    return False
+
+
+def _mentions_buffer_name(expr: ast.AST) -> bool:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Name) \
+                and any(w in n.id.lower() for w in _BUFFER_WORDS):
+            return True
+        if isinstance(n, ast.Attribute) \
+                and any(w in n.attr.lower() for w in _BUFFER_WORDS):
+            return True
+    return False
+
+
+def _routes_through_shard(fi: FuncInfo) -> bool:
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else "")
+            if name in _SHARD_HELPERS:
+                return True
+    return False
+
+
+# -- TRC005: runner-cache-key completeness ----------------------------------
+
+def check_cache_keys(index: Index) -> List[Finding]:
+    """Find module-level ``*_CACHE`` dicts, the functions that index them,
+    and verify every parameter of each such function feeds the key."""
+    out: List[Finding] = []
+    for mod in index.modules:
+        caches = _module_cache_names(mod)
+        if not caches:
+            continue
+        for fi in index.funcs.values():
+            if fi.module is not mod:
+                continue
+            key_exprs = _cache_key_exprs(fi, caches)
+            if not key_exprs:
+                continue
+            fed = _names_feeding_key(fi, key_exprs)
+            for p in fi.params():
+                if p in fed:
+                    continue
+                line = key_exprs[0].lineno
+                out.append(mod.finding(
+                    line, "TRC005",
+                    f"parameter '{p}' of '{fi.qualname}' never reaches its "
+                    f"runner-cache key — two calls differing only in "
+                    f"'{p}' would share a stale compiled runner"))
+    return out
+
+
+def _module_cache_names(mod) -> Set[str]:
+    names: Set[str] = set()
+    for stmt in mod.tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        else:
+            continue
+        if not (isinstance(value, (ast.Dict, ast.DictComp))
+                or (isinstance(value, ast.Call)
+                    and isinstance(value.func, ast.Name)
+                    and value.func.id in ("dict", "OrderedDict"))):
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name) and "CACHE" in t.id.upper():
+                names.add(t.id)
+    return names
+
+
+def _cache_key_exprs(fi: FuncInfo, caches: Set[str]) -> List[ast.AST]:
+    """Expressions used to index/get/probe a module cache inside `fi`,
+    resolved through one level of ``key = (...)`` indirection."""
+    idx_exprs: List[ast.AST] = []
+    for node in iter_own(fi.node):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id in caches:
+            idx_exprs.append(node.slice)
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id in caches \
+                and node.func.attr in ("get", "setdefault", "pop") \
+                and node.args:
+            idx_exprs.append(node.args[0])
+        elif isinstance(node, ast.Compare) \
+                and any(isinstance(c, ast.Name) and c.id in caches
+                        for c in node.comparators) \
+                and any(isinstance(op, (ast.In, ast.NotIn))
+                        for op in node.ops):
+            idx_exprs.append(node.left)
+    resolved: List[ast.AST] = []
+    for e in idx_exprs:
+        if isinstance(e, ast.Name):
+            for stmt in iter_own(fi.node):
+                if isinstance(stmt, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == e.id
+                        for t in stmt.targets):
+                    resolved.append(stmt.value)
+        else:
+            resolved.append(e)
+    return resolved
+
+
+def _names_feeding_key(fi: FuncInfo, key_exprs: List[ast.AST]) -> Set[str]:
+    """Names appearing in the key, closed over intra-function assignments
+    (``mesh_key = _mesh_shape(mesh)`` pulls in ``mesh``)."""
+    fed: Set[str] = set()
+    for e in key_exprs:
+        for n in ast.walk(e):
+            if isinstance(n, ast.Name):
+                fed.add(n.id)
+    for _ in range(10):
+        before = len(fed)
+        for stmt in iter_own(fi.node):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            tnames = {n.id for t in stmt.targets for n in ast.walk(t)
+                      if isinstance(n, ast.Name)}
+            if tnames & fed:
+                for n in ast.walk(stmt.value):
+                    if isinstance(n, ast.Name):
+                        fed.add(n.id)
+        if len(fed) == before:
+            break
+    return fed

@@ -1,0 +1,297 @@
+"""TRC001 (host-sync hazards) and TRC002 (RNG hygiene).
+
+Both rules only fire inside functions the index marks jit/scan-reachable;
+host-side drivers are free to call ``float()`` on concrete arrays or use
+NumPy's RNG. See `repro.analysis.traceinfo` for how "traced" and
+"tracer-flowing" are inferred.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.core import Finding
+from repro.analysis.traceinfo import FuncInfo, Index, iter_own
+
+# -- TRC001: host-sync hazards ----------------------------------------------
+
+#: builtins that force a concrete value (ConcretizationTypeError / silent
+#: device sync at best) when handed a tracer
+_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+#: method calls that do the same
+_SYNC_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host"}
+
+
+def check_host_sync(index: Index) -> List[Finding]:
+    out: List[Finding] = []
+    for fi in index.traced_functions():
+        tainted = index.tainted_names(fi)
+        mod = fi.module
+        for node in iter_own(fi.node):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id in _SYNC_BUILTINS \
+                        and any(index.expr_tainted(fi, a, tainted)
+                                for a in node.args):
+                    out.append(mod.finding(
+                        node, "TRC001",
+                        f"{f.id}() on a tracer-flowing value inside "
+                        f"traced '{fi.qualname}' forces a host sync"))
+                elif isinstance(f, ast.Attribute) \
+                        and f.attr in _SYNC_METHODS \
+                        and index.expr_tainted(fi, f.value, tainted):
+                    out.append(mod.finding(
+                        node, "TRC001",
+                        f".{f.attr}() on a tracer-flowing value inside "
+                        f"traced '{fi.qualname}' forces a host sync"))
+                elif isinstance(f, ast.Attribute) \
+                        and f.attr in ("asarray", "array") \
+                        and _is_host_numpy(index, mod, f) \
+                        and any(index.expr_tainted(fi, a, tainted)
+                                for a in node.args):
+                    out.append(mod.finding(
+                        node, "TRC001",
+                        f"np.{f.attr}() on a tracer-flowing value inside "
+                        f"traced '{fi.qualname}' forces a host transfer"))
+            elif isinstance(node, (ast.If, ast.While)) \
+                    and index.expr_tainted(fi, node.test, tainted):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                out.append(mod.finding(
+                    node, "TRC001",
+                    f"Python '{kind}' on a tracer-flowing condition inside "
+                    f"traced '{fi.qualname}' (use lax.cond/select/"
+                    f"while_loop)"))
+            elif isinstance(node, ast.Assert) \
+                    and index.expr_tainted(fi, node.test, tainted):
+                out.append(mod.finding(
+                    node, "TRC001",
+                    f"assert on a tracer-flowing condition inside traced "
+                    f"'{fi.qualname}' (use checkify.check)"))
+    return out
+
+
+def _is_host_numpy(index: Index, mod, attr_node: ast.Attribute) -> bool:
+    dotted = index.jaxy_module(mod, attr_node)
+    return dotted is not None and (dotted == "numpy"
+                                   or dotted.startswith("numpy."))
+
+
+# -- TRC002: RNG hygiene -----------------------------------------------------
+
+#: jax.random helpers that DERIVE new keys (do not consume their argument)
+_KEY_DERIVERS = {"PRNGKey", "key", "fold_in", "wrap_key_data", "clone"}
+#: jax.random.split consumes its argument and yields fresh keys
+_KEY_SPLIT = {"split"}
+
+
+def check_rng_hygiene(index: Index) -> List[Finding]:
+    out: List[Finding] = []
+    for fi in index.traced_functions():
+        out += _check_host_rng(index, fi)
+        out += _check_key_reuse(index, fi)
+    return out
+
+
+def _check_host_rng(index: Index, fi: FuncInfo) -> List[Finding]:
+    out: List[Finding] = []
+    mod = fi.module
+    for node in iter_own(fi.node):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        dotted = index.jaxy_module(mod, node.func)
+        if dotted is None:
+            # stdlib `random` module: `import random; random.random()`
+            base = node.func.value
+            if isinstance(base, ast.Name) \
+                    and index.mod_alias[mod.relpath].get(
+                        base.id) == "random":
+                out.append(mod.finding(
+                    node, "TRC002",
+                    f"stdlib random.{node.func.attr}() inside traced "
+                    f"'{fi.qualname}' — host RNG is invisible to tracing; "
+                    f"use jax.random"))
+            continue
+        if dotted.startswith("numpy.random"):
+            out.append(mod.finding(
+                node, "TRC002",
+                f"np.random.{node.func.attr}() inside traced "
+                f"'{fi.qualname}' — host RNG is invisible to tracing; "
+                f"use jax.random"))
+    return out
+
+
+def _jax_random_call(index: Index, mod, call: ast.Call):
+    """(primitive_name, call) if `call` is jax.random.<prim>(...)."""
+    if not isinstance(call.func, ast.Attribute):
+        return None
+    dotted = index.jaxy_module(mod, call.func)
+    if dotted is None or not dotted.startswith("jax.random."):
+        return None
+    return call.func.attr
+
+
+class _KeyState:
+    """Per-name key lifecycle: 'fresh' or ('consumed', line, by)."""
+
+    def __init__(self):
+        self.state = {}
+
+    def copy(self):
+        ks = _KeyState()
+        ks.state = dict(self.state)
+        return ks
+
+    def merge(self, other: "_KeyState"):
+        # a key consumed on either branch is consumed after the join
+        for name, st in other.state.items():
+            cur = self.state.get(name)
+            if cur is None or (cur == "fresh" and st != "fresh"):
+                self.state[name] = st
+
+
+def _check_key_reuse(index: Index, fi: FuncInfo) -> List[Finding]:
+    """Linear simulation of key consumption through the function body.
+
+    Keys are born from ``jax.random.PRNGKey/key/split/fold_in`` results (and
+    parameters named like keys). ``split`` and every sampler CONSUME the key
+    they are given; ``fold_in``/``PRNGKey`` derive without consuming. Feeding
+    an already-consumed key to another jax.random primitive is the finding —
+    two primitives would see identical randomness.
+    """
+    out: List[Finding] = []
+    ks = _KeyState()
+    for p in fi.params():
+        lowered = p.lower()
+        if lowered in ("key", "rng", "prng") or lowered.endswith(
+                ("_key", "_rng")) or lowered in ("keys", "rngs"):
+            ks.state[p] = "fresh"
+    _sim_body(index, fi, list(fi.node.body), ks, out)
+    return out
+
+
+def _sim_body(index: Index, fi: FuncInfo, body, ks: _KeyState,
+              out: List[Finding]) -> bool:
+    """Simulate statements in order; returns True if the block terminates
+    (return/raise) — terminated branches don't merge back."""
+    mod = fi.module
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if isinstance(stmt, ast.If):
+            _sim_expr(index, fi, stmt.test, ks, out)
+            then_ks, else_ks = ks.copy(), ks.copy()
+            t_done = _sim_body(index, fi, stmt.body, then_ks, out)
+            e_done = _sim_body(index, fi, stmt.orelse, else_ks, out)
+            if t_done and e_done:
+                return True
+            ks.state = {}
+            if not t_done:
+                ks.merge(then_ks)
+            if not e_done:
+                ks.merge(else_ks)
+            continue
+        if isinstance(stmt, (ast.For, ast.While)):
+            # two passes: the second catches use-after-consume ACROSS
+            # iterations (key consumed in iter i, reused in iter i+1);
+            # exact repeats of first-pass findings dedupe globally
+            if isinstance(stmt, ast.For):
+                _sim_assign(index, fi, [stmt.target], stmt.iter, ks, out)
+            else:
+                _sim_expr(index, fi, stmt.test, ks, out)
+            _sim_body(index, fi, stmt.body, ks, out)
+            _sim_body(index, fi, stmt.body, ks, out)
+            _sim_body(index, fi, stmt.orelse, ks, out)
+            continue
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            if isinstance(stmt, ast.Return) and stmt.value is not None:
+                _sim_expr(index, fi, stmt.value, ks, out, consume_unknown=False)
+            return True
+        if isinstance(stmt, ast.Assign):
+            _sim_assign(index, fi, stmt.targets, stmt.value, ks, out)
+            continue
+        if isinstance(stmt, ast.AugAssign):
+            _sim_expr(index, fi, stmt.value, ks, out)
+            continue
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            _sim_assign(index, fi, [stmt.target], stmt.value, ks, out)
+            continue
+        if isinstance(stmt, ast.Expr):
+            _sim_expr(index, fi, stmt.value, ks, out)
+            continue
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                _sim_expr(index, fi, item.context_expr, ks, out)
+            if _sim_body(index, fi, stmt.body, ks, out):
+                return True
+            continue
+        if isinstance(stmt, ast.Try):
+            if _sim_body(index, fi, stmt.body, ks, out):
+                return True
+            for h in stmt.handlers:
+                _sim_body(index, fi, h.body, ks.copy(), out)
+            _sim_body(index, fi, stmt.finalbody, ks, out)
+            continue
+        # everything else: just scan contained expressions
+        for sub in ast.iter_child_nodes(stmt):
+            if isinstance(sub, ast.expr):
+                _sim_expr(index, fi, sub, ks, out)
+    return False
+
+
+def _sim_assign(index: Index, fi: FuncInfo, targets, value, ks: _KeyState,
+                out: List[Finding]) -> None:
+    produced = _sim_expr(index, fi, value, ks, out)
+    target_names: Set[str] = set()
+    for tgt in targets:
+        for n in ast.walk(tgt):
+            if isinstance(n, ast.Name):
+                target_names.add(n.id)
+    if produced:
+        for n in target_names:
+            ks.state[n] = "fresh"       # key, sub = split(key): both fresh
+    else:
+        for n in target_names:
+            ks.state.pop(n, None)       # rebinding to a non-key forgets it
+
+
+def _sim_expr(index: Index, fi: FuncInfo, expr, ks: _KeyState,
+              out: List[Finding], consume_unknown: bool = True) -> bool:
+    """Evaluate an expression for key effects. Returns True if the
+    expression produces fresh key(s)."""
+    mod = fi.module
+    produced = False
+    for call in [n for n in ast.walk(expr) if isinstance(n, ast.Call)]:
+        prim = _jax_random_call(index, mod, call)
+        if prim is None:
+            if consume_unknown:
+                # a key handed to an unknown callee is assumed consumed —
+                # but reuse after that is NOT flagged (too speculative)
+                for a in list(call.args) + [k.value for k in call.keywords]:
+                    if isinstance(a, ast.Name) \
+                            and ks.state.get(a.id) == "fresh":
+                        ks.state[a.id] = ("consumed", call.lineno,
+                                          "unknown call")
+            continue
+        if prim in _KEY_DERIVERS:
+            produced = True
+            continue
+        # split and samplers consume their key argument
+        key_args = [a for a in list(call.args)
+                    + [k.value for k in call.keywords]
+                    if isinstance(a, ast.Name) and a.id in ks.state]
+        for a in key_args:
+            st = ks.state.get(a.id)
+            if isinstance(st, tuple):
+                out.append(mod.finding(
+                    call, "TRC002",
+                    f"key '{a.id}' already consumed by "
+                    f"{st[2]} at line {st[1]} is fed to jax.random.{prim} "
+                    f"in traced '{fi.qualname}' — split or fold_in first"))
+            else:
+                ks.state[a.id] = ("consumed", call.lineno,
+                                  f"jax.random.{prim}")
+        if prim in _KEY_SPLIT:
+            produced = True
+    return produced

@@ -1,0 +1,599 @@
+"""Trace-context inference shared by every tracecheck rule.
+
+Answers two questions about the scanned codebase, using nothing but the ASTs:
+
+  1. **Which functions are jit/scan-reachable ("traced")?**  Roots are
+     (a) functions passed to a JAX tracing entry point anywhere in the
+     walked code (``jax.jit(f)``, ``jax.lax.scan(f, ...)``, ``jax.vmap``,
+     ``cond``/``while_loop``/``fori_loop``/``switch``, ``jax.grad`` /
+     ``value_and_grad``, ``jax.tree.map(f, ...)``, ``checkify.checkify``),
+     (b) repo contracts: methods named ``init_state``/``step``/``resync``
+     on `Aggregator` subclasses, every def in the pure traced-library
+     modules (``core/cache.py``, ``kernels/``) except the host-side
+     ``*nbytes`` helpers, and ``shard``/``replicate`` in
+     ``sharding/rules.py``.  The set then closes transitively: a function
+     *called* by a traced function is traced, including calls through
+     enclosing-scope aliases (``rd_ring = ring_read``) and through factory
+     results (``payload_fn = _payload_chain(...)`` where `_payload_chain`
+     returns a nested def), resolved across modules via import tracking.
+     Nested defs of a traced function are traced.
+
+  2. **Which values inside a traced function flow from tracers?**  Taint
+     seeds are results of ``jnp.* / jax.* / lax.* / pl.*`` calls plus the
+     function's *array-ish* parameters (parameters the body itself feeds
+     into JAX ops — a parameter only ever used as a static config never
+     taints, so e.g. ``shard(x, axes)``'s `axes` stays clean).  Taint
+     propagates through assignments, arithmetic, subscripts, tuple unpacks
+     and unknown calls; the static attributes ``.shape/.ndim/.dtype/.size``
+     break it.
+
+Both are heuristics tuned to this repo's idioms: they are differentially
+tested against the fixture corpus (tests/analysis_fixtures/) and the live
+codebase must scan clean, so drift in either direction is caught.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import SourceModule
+
+#: call roots whose function-valued arguments get traced
+_TRACE_ENTRY_ATTRS = {
+    "jit", "vmap", "pmap", "scan", "cond", "while_loop", "fori_loop",
+    "switch", "map", "grad", "value_and_grad", "checkify", "checkpoint",
+    "remat", "associative_scan", "custom_jvp", "custom_vjp", "pallas_call",
+}
+#: module aliases that count as "JAX" for taint seeding / entry detection
+_JAXY_ROOT_MODULES = {
+    "jax", "jax.numpy", "jax.lax", "jax.random", "jax.tree",
+    "jax.tree_util", "jax.experimental", "jax.experimental.checkify",
+    "jax.experimental.pallas", "jax.experimental.pallas.tpu", "jax.nn",
+    "jax.scipy", "jax.flatten_util",
+}
+_NUMPY_MODULES = {"numpy", "numpy.random"}
+#: attribute reads that return static (non-tracer) metadata
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "aval",
+                 "sharding", "nbytes"}
+#: jnp/np calls that answer dtype-lattice questions on host (never tracers)
+_STATIC_JAXY_CALLS = {"issubdtype", "isdtype", "result_type",
+                      "promote_types", "canonicalize_dtype"}
+
+#: repo-contract traced surfaces (module suffix -> excluded def names)
+_TRACED_MODULE_SUFFIXES = {
+    "core/cache.py": {"nbytes", "tree_cache_nbytes"},
+    "kernels/": set(),
+}
+_TRACED_SHARDING_DEFS = {"shard", "replicate", "logical_to_spec"}
+_AGG_TRACED_METHODS = {"init_state", "step", "resync"}
+
+
+#: param names that are static config by repo convention, never tracers
+_STATIC_PARAM_NAMES = {"dtype", "shape", "axis", "axes", "layout", "mesh",
+                       "interpret", "cfg", "config", "block_d", "self",
+                       "cls"}
+#: annotation substrings that mark a param as definitely array-valued
+_ARRAY_ANN = ("Array", "ndarray", "Tensor", "ArrayLike", "PyTree")
+#: annotation substrings that mark a param as static host config
+_STATIC_ANN = ("bool", "int", "str", "float", "Config", "Literal",
+               "Callable", "Schedule", "None")
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    node: ast.AST                       # FunctionDef / AsyncFunctionDef
+    module: SourceModule
+    qualname: str
+    parent: Optional["FuncInfo"] = None
+    traced: bool = False
+    traced_via: str = ""                # why (debugging / messages)
+    #: True when every (non-static) param is a tracer by contract — scan
+    #: bodies, jit roots, Aggregator.step/resync
+    seed_params: bool = False
+    #: params declared static (jit static_argnames / static_argnums)
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        return [n for n in names if n not in ("self", "cls")]
+
+    def tracer_params(self) -> List[str]:
+        """Params that can actually hold tracers: drops static_argnames,
+        conventionally-static names, and statically-annotated params."""
+        a = self.node.args
+        out = []
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.arg in self.static_params \
+                    or p.arg in _STATIC_PARAM_NAMES:
+                continue
+            if p.annotation is not None and _static_annotation(p.annotation):
+                continue
+            out.append(p.arg)
+        return out
+
+
+class Index:
+    """Cross-module function/alias index + traced marking + taint cache."""
+
+    def __init__(self, modules: List[SourceModule]):
+        self.modules = modules
+        self.funcs: Dict[int, FuncInfo] = {}          # id(node) -> info
+        #: per module: top-level def name -> FuncInfo
+        self.top: Dict[str, Dict[str, FuncInfo]] = {}
+        #: per module: import alias -> dotted module name ("np" -> "numpy")
+        self.mod_alias: Dict[str, Dict[str, str]] = {}
+        #: per module: name -> (source module dotted, original name) for
+        #: ``from X import y [as z]``
+        self.from_imports: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        #: dotted repro module name -> SourceModule (best-effort)
+        self.by_dotted: Dict[str, SourceModule] = {}
+        self._taint_cache: Dict[int, Set[str]] = {}
+        for m in modules:
+            self._index_module(m)
+        self._mark_traced()
+
+    # -- construction -------------------------------------------------------
+
+    def _dotted_name(self, mod: SourceModule) -> str:
+        parts = mod.relpath[:-3].replace("\\", "/").split("/")
+        if "src" in parts:
+            parts = parts[parts.index("src") + 1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def _index_module(self, mod: SourceModule) -> None:
+        key = mod.relpath
+        self.top[key] = {}
+        self.mod_alias[key] = {}
+        self.from_imports[key] = {}
+        self.by_dotted[self._dotted_name(mod)] = mod
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for al in node.names:
+                    self.mod_alias[key][al.asname or
+                                        al.name.split(".")[0]] = al.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for al in node.names:
+                    self.from_imports[key][al.asname or al.name] = (
+                        node.module, al.name)
+
+        def visit(node, parent_fi, prefix):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    fi = FuncInfo(child, mod, f"{prefix}{child.name}",
+                                  parent=parent_fi)
+                    self.funcs[id(child)] = fi
+                    if parent_fi is None and isinstance(node, ast.Module):
+                        self.top[key][child.name] = fi
+                    visit(child, fi, f"{prefix}{child.name}.")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, parent_fi, f"{prefix}{child.name}.")
+                else:
+                    visit(child, parent_fi, prefix)
+        visit(mod.tree, None, "")
+
+    # -- name / call resolution ---------------------------------------------
+
+    def jaxy_module(self, mod: SourceModule, expr: ast.AST) -> Optional[str]:
+        """Dotted module name if `expr` is (an attribute path rooted at) an
+        imported jax-family module alias, else None."""
+        parts = []
+        while isinstance(expr, ast.Attribute):
+            parts.append(expr.attr)
+            expr = expr.value
+        if not isinstance(expr, ast.Name):
+            return None
+        base = self.mod_alias[mod.relpath].get(expr.id)
+        if base is None:
+            fi = self.from_imports[mod.relpath].get(expr.id)
+            if fi is not None:          # from jax.experimental import checkify
+                cand = f"{fi[0]}.{fi[1]}"
+                base = cand if cand in _JAXY_ROOT_MODULES else None
+        if base is None:
+            return None
+        dotted = ".".join([base] + list(reversed(parts)))
+        roots = _JAXY_ROOT_MODULES | _NUMPY_MODULES
+        for r in roots:
+            if dotted == r or dotted.startswith(r + "."):
+                return dotted
+        return None
+
+    def is_jaxy_call(self, mod: SourceModule, call: ast.Call) -> bool:
+        d = self.jaxy_module(mod, call.func)
+        return d is not None and not any(
+            d.startswith(n) for n in _NUMPY_MODULES)
+
+    def resolve_name(self, mod: SourceModule, fi: Optional[FuncInfo],
+                     name: str) -> List[FuncInfo]:
+        """Resolve `name` (a called identifier) to candidate FuncInfos:
+        enclosing-scope nested defs and aliases, module top-level defs, then
+        ``from``-imports into other walked modules. Alias assignments
+        (``g = f`` / ``g = factory(...)``) resolve through one level."""
+        out: List[FuncInfo] = []
+        scope = fi
+        while scope is not None:
+            for child in ast.walk(scope.node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)) \
+                        and child.name == name and id(child) in self.funcs:
+                    out.append(self.funcs[id(child)])
+            out += self._resolve_assigned(mod, scope.node, name)
+            scope = scope.parent
+        if name in self.top[mod.relpath]:
+            out.append(self.top[mod.relpath][name])
+        imp = self.from_imports[mod.relpath].get(name)
+        if imp is not None:
+            src = self.by_dotted.get(imp[0])
+            if src is not None and imp[1] in self.top[src.relpath]:
+                out.append(self.top[src.relpath][imp[1]])
+        return out
+
+    def _resolve_assigned(self, mod: SourceModule, scope_node: ast.AST,
+                          name: str) -> List[FuncInfo]:
+        """``name = other`` and ``name = factory(...)`` (incl. tuple forms):
+        resolve to the aliased def, or to the def(s) a factory returns."""
+        out: List[FuncInfo] = []
+        for stmt in ast.walk(scope_node):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            for tgt, val in _assign_pairs(stmt):
+                names = {n.id for n in ast.walk(tgt)
+                         if isinstance(n, ast.Name)}
+                if name not in names:
+                    continue
+                if isinstance(val, ast.Name) and isinstance(tgt, ast.Name):
+                    out += self.resolve_name(mod, self.funcs.get(
+                        id(scope_node)), val.id)
+                elif isinstance(val, ast.Call) \
+                        and isinstance(val.func, ast.Name):
+                    # direct alias OR tuple unpack of a factory result:
+                    #   init, chunk, marks = _staleness_program(...)
+                    for factory in self.resolve_name(
+                            mod, self.funcs.get(id(scope_node)),
+                            val.func.id):
+                        out += self._returned_defs(factory)
+        return out
+
+    def _returned_defs(self, factory: FuncInfo) -> List[FuncInfo]:
+        """Nested defs a factory returns (``return payload`` / jit(payload)
+        / a tuple of such)."""
+        nested = {c.name: self.funcs[id(c)]
+                  for c in ast.walk(factory.node)
+                  if isinstance(c, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and id(c) in self.funcs}
+        out: List[FuncInfo] = []
+        for stmt in ast.walk(factory.node):
+            if isinstance(stmt, ast.Return) and stmt.value is not None:
+                for n in ast.walk(stmt.value):
+                    if isinstance(n, ast.Name) and n.id in nested:
+                        out.append(nested[n.id])
+        return out
+
+    # -- traced marking ------------------------------------------------------
+
+    def _contract_traced(self, fi: FuncInfo) -> Optional[str]:
+        rel = fi.module.relpath
+        for suffix, excl in _TRACED_MODULE_SUFFIXES.items():
+            if (rel.endswith(suffix) or (suffix.endswith("/")
+                                         and f"/{suffix}" in f"/{rel}")) \
+                    and fi.name not in excl:
+                return f"traced module {suffix}"
+        if rel.endswith("sharding/rules.py") \
+                and fi.name in _TRACED_SHARDING_DEFS:
+            return "sharding helper contract"
+        if fi.name in _AGG_TRACED_METHODS and "." in fi.qualname:
+            cls = self._owner_class(fi)
+            if cls is not None and _class_is_aggregator(cls):
+                return "Aggregator method contract"
+        return None
+
+    def _owner_class(self, fi: FuncInfo) -> Optional[ast.ClassDef]:
+        for node in ast.walk(fi.module.tree):
+            if isinstance(node, ast.ClassDef) \
+                    and fi.node in node.body:
+                return node
+        return None
+
+    def _mark_traced(self) -> None:
+        work: List[FuncInfo] = []
+
+        def mark(fi: FuncInfo, why: str):
+            if not fi.traced:
+                fi.traced, fi.traced_via = True, why
+                work.append(fi)
+
+        # roots: contract surfaces + tracing-entry-point call sites
+        for fi in self.funcs.values():
+            why = self._contract_traced(fi)
+            if why:
+                mark(fi, why)
+                if fi.name in _AGG_TRACED_METHODS and fi.name != "init_state":
+                    fi.seed_params = True   # step/resync take (state, arr)
+            self._apply_jit_decorators(fi, mark)
+        for mod in self.modules:
+            for call in ast.walk(mod.tree):
+                if not isinstance(call, ast.Call):
+                    continue
+                if not self._is_trace_entry(mod, call):
+                    continue
+                statics = _call_static_argnames(call)
+                encl = self._enclosing_func(mod, call)
+                for arg in list(call.args) + [k.value for k in
+                                              call.keywords]:
+                    if isinstance(arg, ast.Name):
+                        for cand in self.resolve_name(mod, encl, arg.id):
+                            mark(cand, "passed to a JAX tracing entry point")
+                            cand.seed_params = True
+                            cand.static_params |= statics
+
+        # transitive closure over calls from traced functions
+        while work:
+            fi = work.pop()
+            for child in ast.iter_child_nodes(fi.node):
+                for sub in ast.walk(child):
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)) \
+                            and id(sub) in self.funcs:
+                        mark(self.funcs[id(sub)],
+                             f"nested in traced {fi.qualname}")
+            for call in ast.walk(fi.node):
+                if isinstance(call, ast.Call) \
+                        and isinstance(call.func, ast.Name):
+                    for cand in self.resolve_name(fi.module, fi,
+                                                  call.func.id):
+                        mark(cand, f"called from traced {fi.qualname}")
+                elif isinstance(call, ast.Call) \
+                        and isinstance(call.func, ast.Attribute) \
+                        and isinstance(call.func.value, ast.Name):
+                    # module-alias attribute call: kernel_ops.row_delta(...)
+                    base = call.func.value.id
+                    dotted = self.mod_alias[fi.module.relpath].get(base)
+                    if dotted is None:
+                        imp = self.from_imports[fi.module.relpath].get(base)
+                        if imp is not None:
+                            dotted = f"{imp[0]}.{imp[1]}"
+                    src = self.by_dotted.get(dotted) if dotted else None
+                    if src is not None \
+                            and call.func.attr in self.top[src.relpath]:
+                        mark(self.top[src.relpath][call.func.attr],
+                             f"called from traced {fi.qualname}")
+
+    def _apply_jit_decorators(self, fi: FuncInfo, mark) -> None:
+        """``@jax.jit`` / ``@functools.partial(jax.jit, static_argnames=…)``
+        decorated functions are trace-entry roots themselves."""
+        for dec in fi.node.decorator_list:
+            call = dec if isinstance(dec, ast.Call) else None
+            target = call.func if call else dec
+            # unwrap functools.partial(jax.jit, ...)
+            if call and isinstance(target, ast.Attribute) \
+                    and target.attr == "partial" and call.args:
+                target = call.args[0]
+            is_jit = isinstance(target, ast.Attribute) \
+                and target.attr in _TRACE_ENTRY_ATTRS \
+                and self.jaxy_module(fi.module, target) is not None
+            if not is_jit:
+                continue
+            mark(fi, "jit-decorated")
+            fi.seed_params = True
+            if call is not None:
+                fi.static_params |= _call_static_argnames(call)
+
+    def _is_trace_entry(self, mod: SourceModule, call: ast.Call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Attribute) and f.attr in _TRACE_ENTRY_ATTRS:
+            return self.jaxy_module(mod, f) is not None \
+                or self.jaxy_module(mod, f.value) is not None
+        if isinstance(f, ast.Name):
+            # from jax import jit / from jax.lax import scan styles
+            imp = self.from_imports[mod.relpath].get(f.id)
+            return (imp is not None and imp[1] in _TRACE_ENTRY_ATTRS
+                    and any(imp[0] == m or imp[0].startswith(m)
+                            for m in _JAXY_ROOT_MODULES))
+        return False
+
+    def _enclosing_func(self, mod: SourceModule,
+                        node: ast.AST) -> Optional[FuncInfo]:
+        best = None
+        for fn_node, fi in ((f.node, f) for f in self.funcs.values()
+                            if f.module is mod):
+            if _contains(fn_node, node):
+                if best is None or _contains(best.node, fn_node):
+                    best = fi
+        return best
+
+    # -- taint ---------------------------------------------------------------
+
+    def tainted_names(self, fi: FuncInfo) -> Set[str]:
+        """Names inside `fi` that (may) hold tracer-derived values.
+
+        Seeds: when the function's params are tracers by contract
+        (`seed_params` — scan/cond bodies, jit roots, Aggregator
+        step/resync) every non-static param; otherwise only the params the
+        body itself hands *bare* to a JAX op (a param used purely as host
+        config — a shape int, a flag — never taints)."""
+        cached = self._taint_cache.get(id(fi.node))
+        if cached is not None:
+            return cached
+        if fi.seed_params:
+            seed = set(fi.tracer_params())
+        else:
+            seed = self._bare_jaxy_params(fi, set(fi.tracer_params()))
+        tainted = self._taint_fixpoint(fi, seed)
+        self._taint_cache[id(fi.node)] = tainted
+        return tainted
+
+    def _taint_fixpoint(self, fi: FuncInfo, seed: Set[str]) -> Set[str]:
+        tainted = set(seed)
+        for _ in range(20):
+            before = len(tainted)
+            for stmt in iter_own(fi.node):
+                if isinstance(stmt, ast.Assign):
+                    for tgt, val in _assign_pairs(stmt):
+                        if self.expr_tainted(fi, val, tainted):
+                            for n in ast.walk(tgt):
+                                if isinstance(n, ast.Name):
+                                    tainted.add(n.id)
+                elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)) \
+                        and stmt.value is not None \
+                        and isinstance(stmt.target, ast.Name) \
+                        and self.expr_tainted(fi, stmt.value, tainted):
+                    tainted.add(stmt.target.id)
+                elif isinstance(stmt, ast.For) \
+                        and self.expr_tainted(fi, stmt.iter, tainted):
+                    for n in ast.walk(stmt.target):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+            if len(tainted) == before:
+                break
+        return tainted
+
+    def _bare_jaxy_params(self, fi: FuncInfo,
+                          params: Set[str]) -> Set[str]:
+        """Params passed as a *bare name* argument to a JAX op — nested
+        occurrences (inside shape tuples, ``int(d)`` casts, keyword config)
+        stay untainted."""
+        out: Set[str] = set()
+        for node in iter_own(fi.node):
+            if isinstance(node, ast.Call) \
+                    and self.is_jaxy_call(fi.module, node):
+                for arg in list(node.args) + [k.value for k in
+                                              node.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id in params:
+                        out.add(arg.id)
+        return out
+
+    def expr_tainted(self, fi: FuncInfo, expr: ast.AST,
+                     tainted: Set[str]) -> bool:
+        """Conservative may-taint for an expression."""
+        if expr is None:
+            return False
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in _STATIC_ATTRS:
+                return False
+            return self.expr_tainted(fi, expr.value, tainted)
+        if isinstance(expr, ast.Subscript):
+            return self.expr_tainted(fi, expr.value, tainted)
+        if isinstance(expr, ast.Call):
+            if isinstance(expr.func, ast.Attribute) \
+                    and expr.func.attr in _STATIC_JAXY_CALLS:
+                # dtype-lattice queries return host bools/dtypes, never
+                # tracers — branching on them is trace-time static
+                return False
+            if self.is_jaxy_call(fi.module, expr):
+                return True
+            if isinstance(expr.func, ast.Name) \
+                    and expr.func.id in ("len", "isinstance", "range",
+                                         "type", "id", "repr", "getattr",
+                                         "hasattr", "print"):
+                return False
+            return any(self.expr_tainted(fi, a, tainted)
+                       for a in list(expr.args)
+                       + [k.value for k in expr.keywords])
+        if isinstance(expr, ast.BinOp):
+            return self.expr_tainted(fi, expr.left, tainted) \
+                or self.expr_tainted(fi, expr.right, tainted)
+        if isinstance(expr, ast.UnaryOp):
+            return self.expr_tainted(fi, expr.operand, tainted)
+        if isinstance(expr, ast.BoolOp):
+            return any(self.expr_tainted(fi, v, tainted)
+                       for v in expr.values)
+        if isinstance(expr, ast.Compare):
+            # `x is None` / `x is not None` is a static structure check —
+            # tracers are never None, so the branch is resolved at trace time
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops) \
+                    and all(isinstance(c, ast.Constant) and c.value is None
+                            for c in expr.comparators):
+                return False
+            return self.expr_tainted(fi, expr.left, tainted) or any(
+                self.expr_tainted(fi, c, tainted) for c in expr.comparators)
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.expr_tainted(fi, e, tainted) for e in expr.elts)
+        if isinstance(expr, ast.Dict):
+            return any(self.expr_tainted(fi, v, tainted)
+                       for v in expr.values if v is not None)
+        if isinstance(expr, ast.IfExp):
+            return self.expr_tainted(fi, expr.body, tainted) \
+                or self.expr_tainted(fi, expr.orelse, tainted)
+        if isinstance(expr, ast.Starred):
+            return self.expr_tainted(fi, expr.value, tainted)
+        return False
+
+    def traced_functions(self) -> List[FuncInfo]:
+        return [fi for fi in self.funcs.values() if fi.traced]
+
+
+def _static_annotation(ann: ast.AST) -> bool:
+    """True when a param annotation marks host config rather than arrays."""
+    try:
+        text = ast.unparse(ann)
+    except Exception:       # pragma: no cover - unparse is best-effort
+        return False
+    if any(tok in text for tok in _ARRAY_ANN):
+        return False
+    return any(tok in text for tok in _STATIC_ANN)
+
+
+def _call_static_argnames(call: ast.Call) -> Set[str]:
+    """String constants under static_argnames= (jit-style static params)."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+    return out
+
+
+def iter_own(fnode: ast.AST):
+    """Walk a function body WITHOUT descending into nested function/class
+    defs (those are separate FuncInfos, analysed on their own)."""
+    stack = list(ast.iter_child_nodes(fnode))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _assign_pairs(stmt: ast.Assign):
+    """(target, value) pairs incl. parallel tuple assignments
+    ``a, b = x, y`` (element-wise) and broadcast ``a, b = f()``."""
+    for tgt in stmt.targets:
+        if isinstance(tgt, (ast.Tuple, ast.List)) \
+                and isinstance(stmt.value, (ast.Tuple, ast.List)) \
+                and len(tgt.elts) == len(stmt.value.elts):
+            for t, v in zip(tgt.elts, stmt.value.elts):
+                yield t, v
+        else:
+            yield tgt, stmt.value
+
+
+def _class_is_aggregator(cls: ast.ClassDef) -> bool:
+    for b in cls.bases:
+        name = b.id if isinstance(b, ast.Name) else (
+            b.attr if isinstance(b, ast.Attribute) else "")
+        if "Aggregator" in name or name in ("ACED", "ACEIncremental",
+                                            "CA2FL", "FedBuff"):
+            return True
+    return False
+
+
+def _contains(outer: ast.AST, inner: ast.AST) -> bool:
+    if outer is inner:
+        return False
+    return any(n is inner for n in ast.walk(outer))
+
+
+def build_index(modules: List[SourceModule]) -> Index:
+    return Index(modules)

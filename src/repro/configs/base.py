@@ -8,8 +8,8 @@ mamba+shared-attention) still lower as ``lax.scan`` over a single traced unit.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
 
 # Layer kind tags used in stage patterns.
 ATTN = "attn"            # self-attention (global)

@@ -151,9 +151,12 @@ def _init_cache(n, d, dtype, init_grads):
 
 def _zeros_vec(d, dtype="float32"):
     dt = jnp.dtype(dtype)
-    if _is_template(d):
+    # `d` is trace-time static by contract: a Python int (flat layout) or a
+    # params template pytree (tree layout) — never a tracer, so branching on
+    # its type and int() on it are safe here.
+    if _is_template(d):  # tracecheck: ignore[TRC001]
         return jax.tree.map(lambda g: jnp.zeros(tuple(jnp.shape(g)), dt), d)
-    return jnp.zeros((int(d),), dt)
+    return jnp.zeros((int(d),), dt)  # tracecheck: ignore[TRC001]
 
 
 def _astate(vec, dtype):

@@ -25,7 +25,7 @@ repro/core/scan_sharded.py).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -152,8 +152,12 @@ def init_flat_cache(n: int, d: int, dtype: str = "float32",
 # Tree cache (distributed path): one stacked cache per param leaf.
 # ---------------------------------------------------------------------------
 
-def init_tree_cache(n: int, grads_like, dtype: str = "float32",
-                    init_rows=None):
+def init_tree_cache(n: int, grads_like,  # tracecheck: ignore[TRC004]
+                    dtype: str = "float32", init_rows=None):
+    # TRC004 suppressed: tree-cache leaves inherit their sharding from the
+    # enclosing pjit'd train step via the params template (GSPMD propagates
+    # from `grads_like`); only the flat (n, d) cache needs the explicit
+    # logical-axis constraint that FlatCache routes through shard().
     """Per-leaf stacked cache {q: (n, *s), scale?: (n,)} over `grads_like`.
 
     `init_rows` (a grads-like pytree with a leading (n,) client axis — e.g.

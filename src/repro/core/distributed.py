@@ -21,9 +21,7 @@ implementations exist once, in repro/core/aggregators.py.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,7 @@ paper-reproduction benchmarks (Fig. 2/3, Tables a.2/a.3) and examples."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ def mlp_classifier(dims):
         for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
             rng, k = jax.random.split(rng)
             params.append({"w": jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5,
-                           "b": jnp.zeros((b,))})
+                           "b": jnp.zeros((b,), jnp.float32)})
         return params
 
     def apply(params, x):
@@ -43,9 +43,9 @@ def tiny_text_classifier(vocab, d, n_classes, seq_len):
         return {
             "emb": jax.random.normal(k1, (vocab, d)) * 0.05,
             "w1": jax.random.normal(k2, (d, d)) * (2.0 / d) ** 0.5,
-            "b1": jnp.zeros((d,)),
+            "b1": jnp.zeros((d,), jnp.float32),
             "w2": jax.random.normal(k3, (d, n_classes)) * (1.0 / d) ** 0.5,
-            "b2": jnp.zeros((n_classes,)),
+            "b2": jnp.zeros((n_classes,), jnp.float32),
         }
 
     def apply(params, toks):
@@ -187,7 +187,7 @@ def make_lm_task(*, cfg, n_clients=8, batch=8, seq=256, n_tokens=1 << 18,
     def _grad(params, client, rng):
         lo = client * per
         starts = lo + jax.random.randint(rng, (batch,), 0, per - seq - 1)
-        window = toks_j[starts[:, None] + jnp.arange(seq + 1)[None, :]]
+        window = toks_j[starts[:, None] + jnp.arange(seq + 1, dtype=jnp.int32)[None, :]]
         b = {"tokens": window[:, :-1], "targets": window[:, 1:]}
         return jax.value_and_grad(lambda p: model.loss_fn(p, b))(params)
 

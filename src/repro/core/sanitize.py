@@ -1,0 +1,140 @@
+"""Runtime invariant sanitizers for the AFL scan engines (debug builds).
+
+The static analyzer (`repro.analysis`, tracecheck) proves *code-shape*
+contracts; this module asserts the *value* contracts that only hold at
+runtime, compiled into the scan step via `jax.experimental.checkify`:
+
+  * the server model (and any payload actually applied) stays finite after
+    the guard pipeline — a NaN that slips past quarantine is caught at the
+    event that produced it, not T steps later in a loss printout;
+  * the history-ring write cursor and the ACED owner-ring slots stay in
+    bounds (a corrupted slot silently aliases another client's expiry);
+  * ACED's active-set count never goes negative;
+  * the incremental running sums agree with the exact O(n·d) recompute at
+    every `resync_every` self-heal point (drift there means the incremental
+    algebra is wrong, not just that a client misbehaved).
+
+Everything is gated on one static flag threaded through the runner
+factories: ``REPRO_CHECKIFY=1`` in the environment (or ``--checkify`` on
+`launch/train.py`, or ``checkify_invariants=True`` explicitly). **Off means
+off**: the factories trace no check call whatsoever, so the compiled program
+is bit-identical to a build without this module (BENCH-gated, like the
+PR 7 guards-off check). On, the runner is `checkify.checkify`-wrapped and
+raises `jax.experimental.checkify.JaxRuntimeError` on the first violated
+invariant.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+#: tolerance for incremental-vs-resync sum agreement: the incremental path
+#: accumulates one f32 rounding per event, the recompute sums n rows once
+_RESYNC_RTOL = 1e-3
+
+
+def enabled(override: Optional[bool] = None) -> bool:
+    """Resolve the checkify flag: explicit `override` wins, else the
+    ``REPRO_CHECKIFY`` environment variable (default off)."""
+    if override is not None:
+        return bool(override)
+    return os.environ.get("REPRO_CHECKIFY", "0").strip().lower() not in (
+        "", "0", "false", "off", "no")
+
+
+def _checkify():
+    from jax.experimental import checkify
+    return checkify
+
+
+def _finite_pred(tree) -> jnp.ndarray:
+    ok = jnp.asarray(True)
+    for leaf in jax.tree.leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(leaf)))
+    return ok
+
+
+def check_model_finite(w, *, when=None) -> None:
+    """`w` (array or pytree) has no NaN/Inf — post guard, post update."""
+    pred = _finite_pred(w)
+    if when is not None:
+        pred = jnp.logical_or(jnp.logical_not(when), pred)
+    _checkify().check(pred, "checkify: non-finite server model")
+
+
+def check_payload_finite(payload, *, applied) -> None:
+    """An *applied* payload (emit && not quarantined) must be finite —
+    injected-fault payloads that the guards dropped are exempt."""
+    pred = jnp.logical_or(jnp.logical_not(applied), _finite_pred(payload))
+    _checkify().check(pred, "checkify: non-finite payload applied")
+
+
+def check_cursor_bounds(cursor, n_slots: int) -> None:
+    """History-ring write cursor stays a valid slot index."""
+    c = jnp.asarray(cursor)
+    _checkify().check(
+        jnp.logical_and(c >= 0, c < n_slots),
+        "checkify: ring cursor out of bounds")
+
+
+def check_aggregator_state(state, n_clients: int) -> None:
+    """Rule-state value invariants, keyed on the state dict's own fields so
+    one call covers every aggregator:
+
+      * ``ring`` — ACED expiry owner-ring: every slot is -1 (empty) or a
+        valid client index in [0, n);
+      * ``count`` / ``init_count`` — active-set sizes are ≥ 0 (and ≤ n).
+    """
+    if not isinstance(state, dict):
+        return
+    checkify = _checkify()
+    ring = state.get("ring")
+    if ring is not None:
+        checkify.check(
+            jnp.all(jnp.logical_and(ring >= -1, ring < n_clients)),
+            "checkify: owner-ring slot out of bounds")
+    for field in ("count", "init_count"):
+        cnt = state.get(field)
+        if cnt is not None:
+            checkify.check(
+                jnp.all(jnp.logical_and(cnt >= 0, cnt <= n_clients)),
+                "checkify: active-set count out of range")
+
+
+def check_resync_agreement(incremental_state, resynced_state) -> None:
+    """At a `resync_every` self-heal point the exact O(n·d) recompute must
+    agree with the incrementally-tracked sums (loose f32 tolerance)."""
+    checkify = _checkify()
+    ok = jnp.asarray(True)
+    inc = jax.tree.leaves(incremental_state)
+    exact = jax.tree.leaves(resynced_state)
+    for a, b in zip(inc, exact):
+        a = jnp.asarray(a)
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            continue
+        tol = _RESYNC_RTOL * (1.0 + jnp.max(jnp.abs(b)))
+        ok = jnp.logical_and(ok, jnp.max(jnp.abs(a - b)) <= tol)
+    checkify.check(ok, "checkify: incremental sums diverged from resync "
+                       "recompute")
+
+
+def wrap_checked(fn):
+    """`checkify.checkify` a traced callable (one whose body contains
+    `checkify.check` calls) and return a jitted host wrapper that throws
+    `JaxRuntimeError` on the first failed check. Not vmappable — errors
+    can't throw mid-batch, which is why the vmapped sweep paths always
+    build their runners with ``checkify_invariants=False``."""
+    checkify = _checkify()
+    checked = jax.jit(checkify.checkify(fn, errors=checkify.user_checks))
+
+    def run(*args, **kwargs):
+        err, out = checked(*args, **kwargs)
+        err.throw()
+        return out
+
+    run.checkified = True
+    return run

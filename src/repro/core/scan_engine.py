@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.core import sanitize
 from repro.core.aggregators import (ALGORITHMS, Aggregator, Arrival,
                                     wants_cache_init)
 from repro.core.delays import ExponentialDelays, build_schedule
@@ -78,7 +79,7 @@ def _payload_chain(grad_fn, unravel, local_steps: int, local_lr: float):
             loss, g = grad_fn(unravel(w_flat), client, sub)
             return ravel_pytree(g)[0].astype(jnp.float32), loss, key
         w = w_flat
-        loss = jnp.zeros(())
+        loss = jnp.zeros((), jnp.float32)
         for _ in range(K):
             key, sub = jax.random.split(key)
             loss, g = grad_fn(unravel(w), client, sub)
@@ -90,14 +91,20 @@ def _payload_chain(grad_fn, unravel, local_steps: int, local_lr: float):
 def make_scan_runner(*, grad_fn: Callable, params0, aggregator: Aggregator,
                      n_clients: int, server_lr, T: int, n_events: int,
                      local_steps: int = 1, local_lr: float = 0.05,
-                     init_cache_grads: bool = True, record_w: bool = False):
+                     init_cache_grads: bool = True, record_w: bool = False,
+                     checkify_invariants: Optional[bool] = None):
     """Build the jitted runner ``run(key, arrive, dispatch) -> (w, state, outs)``.
 
     `grad_fn(params, client, rng) -> (loss, grads)` must be trace-safe in
     `client` (a traced int32). `server_lr` may be a float or a trace-safe
     callable of the server iteration t. The returned runner is pure — vmap it
-    over stacked ``(key, arrive, dispatch)`` for multi-seed sweeps.
+    over stacked ``(key, arrive, dispatch)`` for multi-seed sweeps (only
+    with the sanitizers off: a checkified runner throws, so it can't batch).
+    ``checkify_invariants`` (default: the ``REPRO_CHECKIFY`` env var)
+    compiles the repro/core/sanitize value checks into the step; off traces
+    nothing extra — bit-identical program.
     """
+    do_checkify = sanitize.enabled(checkify_invariants)
     n = n_clients
     flat0, unravel = ravel_pytree(params0)
     w0 = jnp.asarray(flat0, jnp.float32)
@@ -113,7 +120,7 @@ def make_scan_runner(*, grad_fn: Callable, params0, aggregator: Aggregator,
             def init_step(key, client):
                 p, _, key = payload_fn(w0, client, key)
                 return key, p
-            key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n))
+            key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n, dtype=jnp.int32))
             state = agg.init_state(n, d, init_rows)
             # paper Alg. 1 line 4-5: apply u^0 before the loop
             w = w - lr_fn(0) * jnp.mean(init_rows, 0)
@@ -145,6 +152,10 @@ def make_scan_runner(*, grad_fn: Callable, params0, aggregator: Aggregator,
                    "unorm": jnp.linalg.norm(u)}
             if record_w:
                 out["w"] = w
+            if do_checkify:
+                sanitize.check_model_finite(w)
+                sanitize.check_payload_finite(payload, applied=emit)
+                sanitize.check_aggregator_state(state, n)
             carry = {
                 "w": w, "key": key, "state": state, "t": t_new,
                 "t_recv": carry["t_recv"].at[dj].set(t_new),
@@ -157,6 +168,8 @@ def make_scan_runner(*, grad_fn: Callable, params0, aggregator: Aggregator,
                                     dispatch.astype(jnp.int32)))
         return carry["w"], carry["state"], outs
 
+    if do_checkify:
+        return sanitize.wrap_checked(_run)
     return jax.jit(_run)
 
 
@@ -270,11 +283,13 @@ def run_scan_seeds(*, grad_fn: Callable, params0, aggregator: Aggregator,
     batch = _seed_batch(seeds, n_clients=n_clients, n_events=n_events,
                         beta=beta, kappa=kappa, concurrency=concurrency)
     if runner is None:
+        # vmapped sweeps are never checkified: a batched checkify error
+        # can't throw per-lane
         runner = make_scan_runner(
             grad_fn=grad_fn, params0=params0, aggregator=aggregator,
             n_clients=n_clients, server_lr=server_lr, T=T, n_events=n_events,
             local_steps=local_steps, local_lr=local_lr,
-            init_cache_grads=init_cache_grads)
+            init_cache_grads=init_cache_grads, checkify_invariants=False)
     wants_init = init_cache_grads and wants_cache_init(aggregator)
     return _run_batch(runner, batch, T, n_clients if wants_init else 0)
 
@@ -307,7 +322,8 @@ def sweep(*, grad_fn: Callable, params0, n_clients: int, server_lr, T: int,
         runner = make_scan_runner(
             grad_fn=grad_fn, params0=params0, aggregator=agg,
             n_clients=n_clients, server_lr=server_lr, T=T, n_events=n_events,
-            local_steps=local_steps, local_lr=local_lr)
+            local_steps=local_steps, local_lr=local_lr,
+            checkify_invariants=False)
         # host schedule precompute stays outside the timed region
         batch = _seed_batch(seeds, n_clients=n_clients, n_events=n_events,
                             beta=beta, kappa=kappa, concurrency=concurrency)

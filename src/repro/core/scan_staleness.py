@@ -93,6 +93,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.core import sanitize
 from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
 from repro.core.cache import (init_tree_cache, tree_cache_row,
                               tree_cache_set_row)
@@ -323,7 +324,7 @@ def _tree_payload_chain(grad_fn, local_steps: int, local_lr: float):
             return (jax.tree.map(lambda x: x.astype(jnp.float32), g),
                     loss, key)
         w_start = w
-        loss = jnp.zeros(())
+        loss = jnp.zeros((), jnp.float32)
         for _ in range(K):
             key, sub = jax.random.split(key)
             loss, g = grad_fn(w, client, sub)
@@ -351,7 +352,8 @@ def _staleness_program(*, grad_fn: Callable, params0,
                        layout: str = "flat",
                        history_dtype: str = "float32",
                        guards: bool = False,
-                       resync_every: Optional[int] = None):
+                       resync_every: Optional[int] = None,
+                       checkify_invariants: bool = False):
     """The protocol as two pure functions: ``(init_fn, chunk_fn, marks)``.
 
     ``init_fn(key, lr) -> carry`` builds the initial scan carry (init-batch
@@ -485,7 +487,7 @@ def _staleness_program(*, grad_fn: Callable, params0,
             def init_step(key, client):
                 p, _, key = payload_fn(w0, client, key)
                 return key, pin_payload(p)
-            key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n))
+            key, init_rows = jax.lax.scan(init_step, key, jnp.arange(n, dtype=jnp.int32))
             state = agg.init_state(n, d_tpl, init_rows)
             # paper Alg. 1 line 4-5: apply u^0 before the loop
             w = apply_init(w, lr_of_t(0, lr), init_mean(init_rows))
@@ -588,10 +590,16 @@ def _staleness_program(*, grad_fn: Callable, params0,
             if resync_every:
                 # periodic exact self-heal of the incremental running sums
                 # (lax.cond: the O(n·d) recompute only runs on the cadence)
+                resync_fn = agg.resync
+                if checkify_invariants:
+                    def resync_fn(s):
+                        s2 = agg.resync(s)
+                        sanitize.check_resync_agreement(s, s2)
+                        return s2
                 state = jax.lax.cond(
                     jnp.logical_and(emit,
                                     jnp.mod(n_upd_new, resync_every) == 0),
-                    agg.resync, lambda s: s, state)
+                    resync_fn, lambda s: s, state)
             eta = lr_of_t(t, lr) * lr_scale
             w = apply_update(carry["w"], u, eta, emit)
             ring, cursor = ap_ring(carry["ring"], carry["cursor"], w, emit)
@@ -622,6 +630,13 @@ def _staleness_program(*, grad_fn: Callable, params0,
                 new_carry["guards"] = {
                     k: carry["guards"][k] + flags[k].astype(jnp.int32)
                     for k in flags}
+            if checkify_invariants:
+                # debug-build value invariants (repro/core/sanitize.py);
+                # the static flag means an off build traces ZERO extra ops
+                sanitize.check_model_finite(w)
+                sanitize.check_payload_finite(payload, applied=emit)
+                sanitize.check_cursor_bounds(cursor, S)
+                sanitize.check_aggregator_state(state, n)
             return new_carry, out
 
         xs = ((gumbels, tau_raw, fault_kind, fault_scale) if guards
@@ -656,7 +671,8 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
                           layout: str = "flat",
                           history_dtype: str = "float32",
                           guards: bool = False,
-                          resync_every: Optional[int] = None):
+                          resync_every: Optional[int] = None,
+                          checkify_invariants: Optional[bool] = None):
     """Build the jitted runner
     ``run(key, gumbels, tau_raw, leave_at, rejoin_at, lr)
           -> (w, state, outs, extras)``.
@@ -678,7 +694,14 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
     With ``guards=True`` the runner takes three trailing arguments
     ``(..., fault_kind, fault_scale, clip_norm)`` (the `FaultSchedule`
     arrays and a traced f32 clip threshold) and ``outs`` carries the
-    per-event quarantined/clipped/rejected flags."""
+    per-event quarantined/clipped/rejected flags.
+
+    ``checkify_invariants`` (default: the ``REPRO_CHECKIFY`` env var)
+    compiles the debug value sanitizers into the step (repro/core/sanitize):
+    the returned runner then raises on the first violated invariant and is
+    not vmappable (the sweep helpers always build with the flag off). Off
+    (the default) traces no check at all — bit-identical program."""
+    do_checkify = sanitize.enabled(checkify_invariants)
     init_fn, chunk_fn, marks = _staleness_program(
         grad_fn=grad_fn, params0=params0, aggregator=aggregator,
         n_clients=n_clients, T=T, beta=beta, server_lr=server_lr,
@@ -686,7 +709,8 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
         local_steps=local_steps, local_lr=local_lr,
         init_cache_grads=init_cache_grads, record_w=record_w,
         layout=layout, history_dtype=history_dtype,
-        guards=guards, resync_every=resync_every)
+        guards=guards, resync_every=resync_every,
+        checkify_invariants=do_checkify)
 
     def _run(key, gumbels, tau_raw, leave_at, rejoin_at, lr, *guard_args):
         carry = init_fn(key, lr)
@@ -697,6 +721,8 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
             extras = {"snaps": carry["snaps"], "hits": carry["hits"]}
         return carry["w"], carry["state"], outs, extras
 
+    if do_checkify:
+        return sanitize.wrap_checked(_run)
     return jax.jit(_run)
 
 
@@ -725,6 +751,9 @@ class ChunkedStalenessRunner:
     #: holds the ``guards`` counter dict (checkpointed with the rest)
     guards: bool = False
     resync_every: Optional[int] = None
+    #: True when the debug value sanitizers are compiled into `chunk`
+    #: (repro/core/sanitize) — chunk then raises on a violated invariant
+    checkify_invariants: bool = False
 
 
 def make_chunked_staleness_runner(*, mesh=None, **kwargs
@@ -733,19 +762,28 @@ def make_chunked_staleness_runner(*, mesh=None, **kwargs
     (a (data, model) jax Mesh) every call runs under `use_rules(mesh)` so
     the model's own logical-axis constraints and the server rules' cache
     layout (clients → data, features → model) apply — the chunked analogue
-    of `make_sharded_staleness_runner`."""
+    of `make_sharded_staleness_runner`. ``checkify_invariants`` (default:
+    the ``REPRO_CHECKIFY`` env var) compiles the debug value sanitizers
+    into `chunk` — see `make_staleness_runner`."""
+    do_checkify = sanitize.enabled(kwargs.pop("checkify_invariants", None))
+    kwargs["checkify_invariants"] = do_checkify
     init_fn, chunk_fn, marks = _staleness_program(**kwargs)
     tau_max = kwargs.get("tau_max")
     if tau_max is None:
         tau_max = default_tau_max(kwargs["beta"])
     guards = kwargs.get("guards", False)
     resync_every = kwargs.get("resync_every")
-    jit_init, jit_chunk = jax.jit(init_fn), jax.jit(chunk_fn)
+    jit_init = jax.jit(init_fn)
+    # only `chunk` carries checks (init traces none), so only it needs the
+    # checkify functionalization + throw wrapper
+    jit_chunk = (sanitize.wrap_checked(chunk_fn) if do_checkify
+                 else jax.jit(chunk_fn))
     if mesh is None:
         return ChunkedStalenessRunner(jit_init, jit_chunk, marks, tau_max,
                                       kwargs.get("layout", "flat"),
                                       guards=guards,
-                                      resync_every=resync_every)
+                                      resync_every=resync_every,
+                                      checkify_invariants=do_checkify)
 
     def init(key, lr):
         with use_rules(mesh):
@@ -757,7 +795,8 @@ def make_chunked_staleness_runner(*, mesh=None, **kwargs
 
     return ChunkedStalenessRunner(init, chunk, marks, tau_max,
                                   kwargs.get("layout", "flat"), mesh,
-                                  guards=guards, resync_every=resync_every)
+                                  guards=guards, resync_every=resync_every,
+                                  checkify_invariants=do_checkify)
 
 
 def _window_slack(n_clients: int, rejoin_at, windows) -> int:
@@ -930,7 +969,10 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
             init_cache_grads=init_cache_grads,
-            guards=guards, resync_every=resync_every)
+            guards=guards, resync_every=resync_every,
+            # vmapped sweeps are never checkified: a batched checkify error
+            # can't throw per-lane (use the single/chunked runners to debug)
+            checkify_invariants=False)
     lr = 0.0 if callable(server_lr) else float(server_lr)
     lrs = jnp.full((len(seeds),), lr, jnp.float32)
     guard_batch = ()
@@ -990,7 +1032,8 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
             init_cache_grads=init_cache_grads,
-            guards=guards, resync_every=resync_every)
+            guards=guards, resync_every=resync_every,
+            checkify_invariants=False)   # vmapped: see run_staleness_seeds
     guard_batch, g_in, g_out = (), (), ()
     if guards:
         fas = [build_fault_schedule(s, n_events, **(fault_rates or {}))

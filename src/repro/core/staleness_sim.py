@@ -12,9 +12,8 @@ event-driven simulator (repro.core.simulator) models the wall-clock fleet
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

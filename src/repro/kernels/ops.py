@@ -15,7 +15,6 @@ fused kernels exactly when the hardware supports them.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import cache_update as _cu
 from repro.kernels import masked_agg as _ma

@@ -15,7 +15,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.configs.base import (ATTN, ATTN_LOCAL, MAMBA, SHARED_ATTN,

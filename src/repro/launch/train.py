@@ -101,6 +101,12 @@ def _parser() -> argparse.ArgumentParser:
     ap.add_argument("--resync-every", type=int, default=0,
                     help="emitted updates between exact recomputes of the "
                     "incremental ACED/CA2FL running sums (0 disables)")
+    ap.add_argument("--checkify", action="store_true",
+                    help="compile the repro.core.sanitize invariant checks "
+                    "into the scan step (finite model/payload, ring-cursor "
+                    "and owner-ring bounds, resync agreement); equivalent "
+                    "to REPRO_CHECKIFY=1. Off is the default and traces "
+                    "zero extra ops")
     return ap
 
 
@@ -185,7 +191,8 @@ def _run(args) -> float:
         aggregator=agg, n_clients=aflc.n_clients, T=T, beta=args.beta,
         server_lr=server_lr, tau_max=tau_max, speed_skew=args.speed_skew,
         layout="tree", history_dtype=args.history_dtype,
-        guards=guards, resync_every=resync_every)
+        guards=guards, resync_every=resync_every,
+        checkify_invariants=args.checkify or None)
 
     lr0 = jnp.float32(0.0)   # schedule baked in; runtime lr unused
     carry = runner.init(jax.random.PRNGKey(args.seed), lr0)

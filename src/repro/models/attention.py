@@ -6,8 +6,6 @@ All softmax accumulation in f32. Pure JAX — TPU Pallas is reserved for the
 paper's server-side hot-spots (see repro/kernels)."""
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,15 +14,13 @@ decode:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, SHARED_ATTN, ModelConfig
-from repro.models import attention as attn_lib
+from repro.configs.base import ATTN, SHARED_ATTN, ModelConfig
 from repro.models import transformer as tf
 from repro.models.layers import (embed_apply, embed_init, mrope_angles,
                                  rms_norm, rope_angles, unembed_apply)

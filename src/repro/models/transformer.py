@@ -11,19 +11,16 @@ MLA vs GQA are chosen from the config. Encoder-decoder adds a bidirectional
 encoder stack and per-decoder-layer cross-attention."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, SHARED_ATTN, ModelConfig
+from repro.configs.base import ATTN_LOCAL, MAMBA, SHARED_ATTN, ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.layers import (embed_apply, embed_init, mlp_apply, mlp_init,
-                                 mrope_angles, rms_norm, rope_angles,
-                                 unembed_apply)
+from repro.models.layers import mlp_apply, mlp_init, rms_norm
 from repro.sharding.rules import shard
 
 

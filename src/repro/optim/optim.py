@@ -6,7 +6,6 @@ provided; the distributed AFL step composes any of them with the aggregated
 update u."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

@@ -16,8 +16,6 @@ Rules (in/out projection convention):
 """
 from __future__ import annotations
 
-import re
-from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

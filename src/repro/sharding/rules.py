@@ -7,10 +7,9 @@ so the same model code runs single-device smoke tests and 512-chip dry-runs.
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()

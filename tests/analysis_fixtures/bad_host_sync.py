@@ -1,0 +1,39 @@
+"""TRC001 true positives: host syncs / Python control flow on tracers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def as_python_float(x):
+    return float(x)  # EXPECT[TRC001]
+
+
+@jax.jit
+def item_sync(x):
+    return x.item()  # EXPECT[TRC001]
+
+
+@jax.jit
+def branch_on_tracer(x):
+    if x > 0:  # EXPECT[TRC001]
+        return x
+    return -x
+
+
+@jax.jit
+def loop_on_tracer(x):
+    while x < 10:  # EXPECT[TRC001]
+        x = x * 2
+    return x
+
+
+@jax.jit
+def assert_on_tracer(x):
+    assert x > 0  # EXPECT[TRC001]
+    return x
+
+
+@jax.jit
+def host_round_trip(x):
+    return jnp.sum(np.asarray(x))  # EXPECT[TRC001]

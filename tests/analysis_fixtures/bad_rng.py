@@ -1,0 +1,30 @@
+"""TRC002 true positives: key reuse and host RNG inside traced code."""
+import random
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def key_reuse(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # EXPECT[TRC002]
+    return a + b
+
+
+@jax.jit
+def host_numpy_rng(x):
+    return x * np.random.rand()  # EXPECT[TRC002]
+
+
+@jax.jit
+def host_stdlib_rng(x):
+    return x * random.random()  # EXPECT[TRC002]
+
+
+@jax.jit
+def cross_iteration_reuse(key, x):
+    total = x
+    for _ in range(3):
+        total = total + jax.random.normal(key, ())  # EXPECT[TRC002]
+    return total

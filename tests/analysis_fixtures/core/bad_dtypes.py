@@ -1,0 +1,16 @@
+"""TRC003 true positives: default-dtype buffers and beyond-f32 literals."""
+import jax
+import jax.numpy as jnp
+
+
+def make_buffers(n):
+    hist = jnp.zeros((n, 4))  # EXPECT[TRC003]
+    mask = jnp.ones((n,))  # EXPECT[TRC003]
+    idx = jnp.arange(n)  # EXPECT[TRC003]
+    owner = jnp.full((n,), -1)  # EXPECT[TRC003]
+    return hist, mask, idx, owner
+
+
+@jax.jit
+def high_precision_literal(x):
+    return x * 3.141592653589793  # EXPECT[TRC003]

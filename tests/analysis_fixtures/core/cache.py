@@ -1,0 +1,14 @@
+"""TRC004: buffer producers in a sharding-contract module (core/cache.py)."""
+import jax.numpy as jnp
+
+from repro.core.distributed import shard
+
+
+def init_flat_cache(n, d):  # EXPECT[TRC004]
+    cache = jnp.zeros((n, d), jnp.float32)
+    return cache
+
+
+def init_owner_ring(n, d):
+    ring = jnp.full((n, d), 0.0, jnp.float32)
+    return shard(ring, "cache")

@@ -1,0 +1,16 @@
+"""Clean twins of bad_dtypes: dtypes pinned, literals f32-exact."""
+import jax
+import jax.numpy as jnp
+
+
+def make_buffers(n):
+    hist = jnp.zeros((n, 4), jnp.float32)
+    mask = jnp.ones((n,), dtype=jnp.bool_)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    owner = jnp.full((n,), -1, jnp.int32)
+    return hist, mask, idx, owner
+
+
+@jax.jit
+def exact_literal(x):
+    return x * 0.25

@@ -1,0 +1,33 @@
+"""Clean twins of bad_host_sync: same shapes, no host-sync hazards."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def static_branch(x, upscale: bool):
+    if upscale:             # static python argument — resolved at trace time
+        return x * 2
+    return x
+
+
+@jax.jit
+def shape_branch(x):
+    if x.shape[0] > 2:      # .shape is static metadata, not a tracer
+        return x[:2]
+    return x
+
+
+@jax.jit
+def traced_select(x):
+    return jnp.where(x > 0, x, -x)
+
+
+@jax.jit
+def none_check(x, mask=None):
+    if mask is None:        # identity-vs-None is trace-time static
+        return x
+    return x * mask
+
+
+def host_driver(x):
+    return float(x)         # host code may concretise freely

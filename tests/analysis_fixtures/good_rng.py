@@ -1,0 +1,26 @@
+"""Clean twins of bad_rng: split / fold_in key discipline."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def split_then_sample(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.normal(k1, (4,)) + jax.random.uniform(k2, (4,))
+
+
+@jax.jit
+def fold_in_loop(key, x):
+    total = x
+    for i in range(3):
+        total = total + jax.random.normal(jax.random.fold_in(key, i), ())
+    return total
+
+
+@jax.jit
+def threaded_carry(key, x):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, ())
+    key, sub = jax.random.split(key)
+    b = jax.random.normal(sub, ())
+    return x + a + b

@@ -1,0 +1,21 @@
+"""TRC005: memoised runner factory whose cache key misses a parameter."""
+import jax
+
+_RUNNER_CACHE = {}
+_FULL_CACHE = {}
+
+
+def leaky_runner(n_clients, horizon, beta):
+    key = (n_clients, horizon)  # EXPECT[TRC005]
+    if key not in _RUNNER_CACHE:
+        _RUNNER_CACHE[key] = jax.jit(
+            lambda x: x * n_clients + horizon + beta)
+    return _RUNNER_CACHE[key]
+
+
+def complete_runner(n_clients, horizon, beta):
+    key = (n_clients, horizon, float(beta))
+    if key not in _FULL_CACHE:
+        _FULL_CACHE[key] = jax.jit(
+            lambda x: x * n_clients + horizon + beta)
+    return _FULL_CACHE[key]

@@ -1,0 +1,7 @@
+"""Inline suppression: acknowledged hazard silenced with an ignore tag."""
+import jax
+
+
+@jax.jit
+def intentional_sync(x):
+    return float(x)  # tracecheck: ignore[TRC001]

@@ -1,13 +1,17 @@
 """Aggregation rules: exact semantics + the paper's Table 1 term properties."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregators import (ACED, ACEDDirect, ACEDirect,
-                                    ACEIncremental, Arrival, CA2FL,
-                                    CA2FLDirect, DelayAdaptiveASGD, FedBuff,
-                                    VanillaASGD)
+from repro.core.aggregators import (ACED,
+                                    ACEDDirect,
+                                    ACEDirect,
+                                    ACEIncremental,
+                                    Arrival,
+                                    CA2FL,
+                                    CA2FLDirect,
+                                    DelayAdaptiveASGD,
+                                    FedBuff)
 from repro.core.mse import decompose, expected_update_ace
 
 

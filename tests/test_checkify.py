@@ -1,0 +1,171 @@
+"""Checkify'd invariant sanitizers (repro/core/sanitize): the debug runners
+must trip on corrupted state under REPRO_CHECKIFY=1 / checkify_invariants=True
+and be bit-identical to the plain build when off (the default)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sanitize
+from repro.core.aggregators import ALGORITHMS
+from repro.core.scan_engine import make_scan_runner
+from repro.core.delays import ExponentialDelays, build_schedule
+from repro.core.scan_staleness import (build_staleness_randomness,
+                                       make_chunked_staleness_runner,
+                                       make_staleness_runner)
+
+N, D, T, TAU, N_EV = 4, 16, 20, 8, 64
+
+
+def _quad_grad(params, client, rng):
+    loss = 0.5 * jnp.sum(params ** 2)
+    return loss, params + 0.01 * jax.random.normal(rng, params.shape)
+
+
+def _kwargs(**over):
+    kw = dict(grad_fn=_quad_grad,
+              params0=jnp.linspace(-1.0, 1.0, D).astype(jnp.float32),
+              aggregator=ALGORITHMS["aced"](tau_algo=TAU),
+              n_clients=N, T=T, beta=5.0, server_lr=(lambda t: 0.1),
+              tau_max=TAU, resync_every=8)
+    kw.update(over)
+    return kw
+
+
+@pytest.fixture(scope="module")
+def rand():
+    return build_staleness_randomness(0, N_EV, N, 5.0)
+
+
+def test_env_flag_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    assert sanitize.enabled() is False
+    for val in ("1", "true", "on", "yes"):
+        monkeypatch.setenv("REPRO_CHECKIFY", val)
+        assert sanitize.enabled() is True
+    for val in ("0", "false", "off", ""):
+        monkeypatch.setenv("REPRO_CHECKIFY", val)
+        assert sanitize.enabled() is False
+    # explicit override beats the env var either way
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    assert sanitize.enabled(False) is False
+    monkeypatch.setenv("REPRO_CHECKIFY", "0")
+    assert sanitize.enabled(True) is True
+
+
+def test_default_runner_is_unchecked(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    run = make_staleness_runner(**_kwargs())
+    assert not getattr(run, "checkified", False)
+
+
+def test_env_var_turns_sanitizers_on(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    run = make_staleness_runner(**_kwargs())
+    assert getattr(run, "checkified", False)
+
+
+def test_staleness_clean_run_bit_identical(rand):
+    """A healthy trajectory passes every invariant and matches the
+    unchecked build bit for bit — the sanitizers only observe."""
+    off = make_staleness_runner(**_kwargs(), checkify_invariants=False)
+    on = make_staleness_runner(**_kwargs(), checkify_invariants=True)
+    key, lr0 = jax.random.PRNGKey(0), jnp.float32(0.0)
+    rargs = (rand.gumbels, rand.tau_raw, rand.leave_at, rand.rejoin_at, lr0)
+    w_off, s_off, o_off, _ = off(key, *rargs)
+    w_on, s_on, o_on, _ = on(key, *rargs)
+    np.testing.assert_array_equal(np.asarray(w_off), np.asarray(w_on))
+    for a, b in zip(jax.tree.leaves((s_off, o_off)),
+                    jax.tree.leaves((s_on, o_on))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scan_engine_clean_run_bit_identical():
+    sched = build_schedule(
+        ExponentialDelays(beta=5.0, kappa=0.0, n_clients=N, seed=0),
+        N_EV, None, 0)
+    kw = dict(grad_fn=_quad_grad,
+              params0=jnp.linspace(-1.0, 1.0, D).astype(jnp.float32),
+              aggregator=ALGORITHMS["aced"](tau_algo=TAU),
+              n_clients=N, server_lr=0.1, T=T, n_events=N_EV)
+    off = make_scan_runner(**kw, checkify_invariants=False)
+    on = make_scan_runner(**kw, checkify_invariants=True)
+    w1, _, o1 = off(jax.random.PRNGKey(0), sched.arrive, sched.dispatch)
+    w2, _, o2 = on(jax.random.PRNGKey(0), sched.arrive, sched.dispatch)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    for a, b in zip(jax.tree.leaves(o1), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.fixture(scope="module")
+def checked_chunked(rand):
+    cr = make_chunked_staleness_runner(**_kwargs(),
+                                       checkify_invariants=True)
+    carry = cr.init(jax.random.PRNGKey(0), jnp.float32(0.0))
+    half = N_EV // 2
+    carry, _ = cr.chunk(carry, rand.gumbels[:half], rand.tau_raw[:half],
+                        rand.leave_at, rand.rejoin_at, jnp.float32(0.0))
+    return cr, carry
+
+
+def _second_half(cr, carry, rand):
+    half = N_EV // 2
+    c, _ = cr.chunk(carry, rand.gumbels[half:], rand.tau_raw[half:],
+                    rand.leave_at, rand.rejoin_at, jnp.float32(0.0))
+    return jax.block_until_ready(c["w"])
+
+
+def test_chunked_clean_chunk_passes(checked_chunked, rand):
+    cr, carry = checked_chunked
+    assert cr.checkify_invariants
+    assert np.all(np.isfinite(np.asarray(_second_half(cr, carry, rand))))
+
+
+def test_nan_model_trips_checkify(checked_chunked, rand):
+    cr, carry = checked_chunked
+    bad = dict(carry)
+    bad["w"] = carry["w"].at[0].set(jnp.nan)
+    with pytest.raises(Exception, match="non-finite server model"):
+        _second_half(cr, bad, rand)
+
+
+def test_corrupted_owner_ring_trips_checkify(checked_chunked, rand):
+    cr, carry = checked_chunked
+    assert "ring" in carry["state"], "ACED owner-ring moved"
+    bad = dict(carry)
+    bad["state"] = dict(carry["state"])
+    bad["state"]["ring"] = bad["state"]["ring"].at[0].set(9999)
+    with pytest.raises(Exception, match="owner-ring slot out of bounds"):
+        _second_half(cr, bad, rand)
+
+
+def test_chunked_off_matches_on_bit_identical(checked_chunked, rand):
+    cr_on, _ = checked_chunked
+    cr_off = make_chunked_staleness_runner(**_kwargs(),
+                                          checkify_invariants=False)
+    half = N_EV // 2
+    args = (rand.gumbels[:half], rand.tau_raw[:half],
+            rand.leave_at, rand.rejoin_at, jnp.float32(0.0))
+    c_off, o_off = cr_off.chunk(cr_off.init(jax.random.PRNGKey(0),
+                                            jnp.float32(0.0)), *args)
+    c_on, o_on = cr_on.chunk(cr_on.init(jax.random.PRNGKey(0),
+                                        jnp.float32(0.0)), *args)
+    for a, b in zip(jax.tree.leaves((c_off, o_off)),
+                    jax.tree.leaves((c_on, o_on))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sweeps_force_checkify_off(monkeypatch):
+    """The vmapped sweep helpers must keep working with REPRO_CHECKIFY=1 —
+    they always build their runners unchecked (a batched checkify error
+    can't throw per-lane)."""
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    from repro.core.scan_staleness import run_staleness_seeds
+    res = run_staleness_seeds(
+        grad_fn=_quad_grad,
+        params0=jnp.linspace(-1.0, 1.0, D).astype(jnp.float32),
+        aggregator=ALGORITHMS["aced"](tau_algo=TAU),
+        n_clients=N, T=T, beta=5.0, server_lr=(lambda t: 0.1),
+        seeds=(0, 1))
+    assert len(res) == 2

@@ -2,16 +2,18 @@
 (≤2-ish layers, d_model ≤ 512, ≤ 4 experts) run one forward + one AFL train
 step on CPU; output shapes asserted, no NaNs. Full configs are exercised only
 via the dry-run (ShapeDtypeStruct, no allocation)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import AFLConfig, InputShape
-from repro.configs.registry import (ARCHS, afl_config, get_config, input_specs,
-                                    concrete_batch, supports_shape)
+from repro.configs.base import InputShape
+from repro.configs.registry import (ARCHS,
+                                    afl_config,
+                                    get_config,
+                                    input_specs,
+                                    supports_shape)
 from repro.core.distributed import make_afl_train_step
 from repro.models import build_model
 from repro.optim import sgd

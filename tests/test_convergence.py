@@ -8,7 +8,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.aggregators import ACEIncremental, VanillaASGD
 from repro.core.staleness_sim import StalenessSimulator

@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode.
 Hypothesis property tests live in test_properties.py (optional dependency)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,11 +1,9 @@
 """Launch/dry-run machinery unit tests (the 512-device runs live in
 src/repro/launch/dryrun.py; here we test its components on 1 device)."""
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import INPUT_SHAPES
-from repro.configs.registry import ARCHS, get_config
+from repro.configs.registry import get_config
 from repro.launch.analytic import analytic_costs, decode_flops, forward_flops
 from repro.launch.dryrun import _with_reps, collective_bytes
 

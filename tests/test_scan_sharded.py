@@ -20,7 +20,7 @@ from repro.core.aggregators import (ACED, ACEDDirect, ACEIncremental, CA2FL,
 from repro.core.scan_engine import default_n_events
 from repro.core.scan_sharded import (make_sharded_staleness_runner,
                                      staleness_mesh)
-from repro.core.scan_staleness import (NEVER, build_staleness_randomness,
+from repro.core.scan_staleness import (build_staleness_randomness,
                                        run_staleness_grid,
                                        run_staleness_scan,
                                        run_staleness_seeds)

@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.auto import (_guard, infer_batch_shardings,
-                                 infer_params_shardings, param_spec)
+from repro.sharding.auto import _guard, infer_batch_shardings, param_spec
 from repro.sharding.rules import logical_to_spec, shard, use_rules
 
 

@@ -1,0 +1,169 @@
+"""tracecheck analyzer tests: fixture differential, repo cleanliness, CLI
+contract, baseline round-trip, and the TRC005 runtime meta-test tying the
+live `benchmarks.common._scan_runner` signature to its cache key."""
+import inspect
+import os
+import re
+import subprocess
+import sys
+
+
+from repro.analysis import load_baseline, run_tracecheck, write_baseline
+from repro.analysis.core import RULES, load_modules
+from repro.analysis.rules_contracts import (_cache_key_exprs,
+                                            _module_cache_names,
+                                            _names_feeding_key)
+from repro.analysis.traceinfo import build_index
+
+TESTS = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(TESTS)
+FIXTURES = os.path.join(TESTS, "analysis_fixtures")
+SRC = os.path.join(REPO, "src", "repro")
+BASELINE = os.path.join(REPO, "tracecheck_baseline.json")
+
+_EXPECT_RE = re.compile(r"#\s*EXPECT\[(TRC\d{3})\]")
+
+
+def _expected_markers():
+    exp = set()
+    for dirpath, _, files in os.walk(FIXTURES):
+        for fn in sorted(files):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, FIXTURES).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                for i, line in enumerate(fh, 1):
+                    m = _EXPECT_RE.search(line)
+                    if m:
+                        exp.add((rel, i, m.group(1)))
+    return exp
+
+
+def test_fixture_corpus_differential():
+    """Every EXPECT-marked line yields a finding with the marked rule id,
+    and the clean twins yield nothing."""
+    expected = _expected_markers()
+    assert len(expected) >= 10, "fixture corpus shrank below 10 positives"
+    new, baselined, suppressed = run_tracecheck([FIXTURES], root=FIXTURES)
+    got = {(f.path, f.line, f.rule) for f in new}
+    assert expected - got == set(), \
+        f"tracecheck missed: {sorted(expected - got)}"
+    assert got - expected == set(), \
+        f"tracecheck spurious: {sorted(got - expected)}"
+    assert baselined == []
+
+
+def test_fixture_corpus_covers_every_rule():
+    rules_hit = {r for (_, _, r) in _expected_markers()}
+    assert rules_hit == {"TRC001", "TRC002", "TRC003", "TRC004", "TRC005"}
+    assert set(RULES) == rules_hit
+
+
+def test_inline_suppression_lands_in_suppressed_bucket():
+    new, _, suppressed = run_tracecheck([FIXTURES], root=FIXTURES)
+    sup = {(f.path, f.rule) for f in suppressed}
+    assert ("suppressed.py", "TRC001") in sup
+    assert not any(f.path == "suppressed.py" for f in new)
+
+
+def test_repo_src_has_no_unbaselined_findings():
+    """The acceptance gate: the analyzer over all of src/repro reports zero
+    findings beyond the committed baseline (which is empty)."""
+    new, baselined, _ = run_tracecheck([SRC], root=REPO, baseline=BASELINE)
+    assert new == [], "\n".join(f.format() for f in new)
+    # the committed baseline is empty — keep it that way
+    assert load_baseline(BASELINE) == []
+    assert baselined == []
+
+
+def test_baseline_round_trip(tmp_path):
+    """write_baseline grandfathers every current finding; a rerun against
+    that file reports them as baselined, not new."""
+    new, _, _ = run_tracecheck([FIXTURES], root=FIXTURES)
+    assert new
+    bl = tmp_path / "baseline.json"
+    write_baseline(str(bl), new)
+    new2, baselined2, _ = run_tracecheck([FIXTURES], root=FIXTURES,
+                                         baseline=str(bl))
+    assert new2 == []
+    assert {f.key() for f in baselined2} == {f.key() for f in new}
+
+
+def test_rules_filter(tmp_path):
+    new, _, _ = run_tracecheck([FIXTURES], root=FIXTURES,
+                               rules=["TRC003"])
+    assert new and all(f.rule == "TRC003" for f in new)
+
+
+def test_syntax_error_is_a_finding_not_a_crash(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    new, _, _ = run_tracecheck([str(tmp_path)], root=str(tmp_path))
+    assert [f.rule for f in new] == ["TRC000"]
+
+
+def _cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120)
+
+
+def test_cli_clean_on_repo_src_exit_0():
+    proc = _cli(SRC, "--root", REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 new" in proc.stdout
+
+
+def test_cli_fixture_findings_exit_1_with_annotations():
+    proc = _cli(FIXTURES, "--root", FIXTURES, "--github")
+    assert proc.returncode == 1
+    assert "::error file=bad_rng.py" in proc.stdout
+    assert "TRC004" in proc.stdout
+
+
+def test_cli_list_rules():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in RULES:
+        assert rid in proc.stdout
+
+
+def test_cli_summary_markdown(tmp_path):
+    summary = tmp_path / "summary.md"
+    proc = _cli(FIXTURES, "--root", FIXTURES, "--summary", str(summary))
+    assert proc.returncode == 1
+    text = summary.read_text()
+    assert "## tracecheck" in text and "TRC001" in text
+
+
+def test_trc005_meta_live_scan_runner_key_is_complete():
+    """Runtime meta-test for the PR 3 runner-cache bug class: every
+    parameter of the LIVE `benchmarks.common._scan_runner` must feed its
+    `_RUNNER_CACHE` key (per the analyzer's own dataflow closure), so two
+    calls differing in any static never share a compiled runner."""
+    sys.path.insert(0, REPO)
+    try:
+        import benchmarks.common as common
+    finally:
+        sys.path.remove(REPO)
+    common_path = inspect.getsourcefile(common)
+    mods = load_modules([common_path], root=REPO)
+    index = build_index(mods)
+    fis = [fi for fi in index.funcs.values() if fi.name == "_scan_runner"]
+    assert len(fis) == 1, "_scan_runner moved or was renamed"
+    fi = fis[0]
+    caches = _module_cache_names(fi.module)
+    assert "_RUNNER_CACHE" in caches
+    key_exprs = _cache_key_exprs(fi, caches)
+    assert key_exprs, "_scan_runner no longer indexes _RUNNER_CACHE"
+    fed = _names_feeding_key(fi, key_exprs)
+    sig = inspect.signature(common._scan_runner)
+    missing = [p for p in sig.parameters if p not in fed]
+    assert not missing, (
+        f"parameters {missing} of benchmarks.common._scan_runner never "
+        f"reach the _RUNNER_CACHE key — add them (or a derived static) "
+        f"to the key tuple")

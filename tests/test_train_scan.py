@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import (ACED, ACEIncremental, CA2FL, FedBuff,
                                     VanillaASGD)

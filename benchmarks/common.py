@@ -85,18 +85,21 @@ def _resolve_mesh(mesh):
 
 
 def _scan_runner(task, agg, *, T, beta, speed_skew=0.0, local_steps=1,
-                 local_lr=0.05, eval_marks=None, mesh="auto"):
+                 local_lr=0.05, eval_marks=None, mesh="auto", k_batch=1):
     mesh = _resolve_mesh(mesh)
-    # the key carries every static baked into the compiled runner
+    # the key carries every static baked into the compiled runner — k_batch
+    # included: a K=1 and a K=16 build trace different scan bodies (and
+    # differently-shaped tau_raw inputs), so sharing an entry would replay
+    # the wrong executable (tracecheck TRC005 pins this key complete)
     key = (id(task), repr(agg), T, default_tau_max(beta), speed_skew,
-           local_steps, local_lr, eval_marks,
+           local_steps, local_lr, eval_marks, k_batch,
            None if mesh is None else tuple(sorted(mesh.shape.items())))
     if key not in _RUNNER_CACHE:
         kw = dict(
             grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
             n_clients=task.n_clients, T=T, beta=beta, speed_skew=speed_skew,
             local_steps=local_steps, local_lr=local_lr,
-            eval_marks=eval_marks)
+            eval_marks=eval_marks, k_batch=k_batch)
         runner = (make_staleness_runner(**kw) if mesh is None
                   else make_sharded_staleness_runner(mesh=mesh, **kw))
         _RUNNER_CACHE[key] = (task, runner)

@@ -404,6 +404,87 @@ def _guard_rows(fast=True):
     return rows
 
 
+def _k_batch_rows(fast=True):
+    """Event-batched engine (ISSUE 9): K arrivals consumed per scan tick —
+    Gumbel top-k sampling, one segment-aggregated server update per batch —
+    on the guard-row workload (100-client ACE quadratic). Three gates ride
+    the timing rows: the ``k_batch=1`` build must stay BIT-identical to the
+    unbatched engine (dev == 0.0 — same scan body, gated dispatch), every
+    K>1 build must match the host K-batch reference ≤1e-5, and K=16 must
+    clear ≥2× the K=1 events/sec (the point of batching: the O(d) server
+    update is amortised over K arrivals)."""
+    n, T, d, beta, seed, lr = 100, 300 if fast else 500, 1024, 5.0, 0, 0.05
+    grad_fn = _quad_grad_fn(n, d, sigma=0.0)
+    n_events = default_n_events(ACEIncremental(), T)
+    kw = dict(grad_fn=grad_fn, params0=jnp.zeros(d),
+              aggregator=ACEIncremental(), n_clients=n, T=T, beta=beta)
+    rows, ev_s = [], {}
+
+    def timed(runner, args):
+        t0 = time.time()
+        jax.block_until_ready(runner(*args)[0])
+        compile_s = time.time() - t0
+        best, res = float("inf"), None
+        for _ in range(5):                  # min-of-5: robust to load spikes
+            t0 = time.time()
+            res = runner(*args)
+            jax.block_until_ready(res[0])
+            best = min(best, time.time() - t0)
+        return best, res, compile_s
+
+    # --- K=1: the dispatch gate — bit-identical to the unbatched engine ---
+    rand = build_staleness_randomness(seed, n_events, n, beta)
+    args = (jax.random.PRNGKey(seed), rand.gumbels, rand.tau_raw,
+            rand.leave_at, rand.rejoin_at, jnp.float32(lr))
+    w_base = np.asarray(make_staleness_runner(**kw)(*args)[0])
+    k1_s, res1, k1_c = timed(make_staleness_runner(**kw, k_batch=1), args)
+    dev0 = float(np.max(np.abs(np.asarray(res1[0]) - w_base)))
+    ev_s[1] = n_events / max(k1_s, 1e-9)
+    rows.append({"bench": "scan_bench", "algo": "staleness_scan_k1",
+                 "events_per_sec": ev_s[1], "wall_s": k1_s,
+                 "compile_s": k1_c, "k_batch": 1, "n_clients": n, "d": d,
+                 "max_dev_vs_unbatched": dev0,
+                 "derived": f"{ev_s[1]:.1f}ev/s_dev={dev0:.1e}"})
+    if dev0 != 0.0:
+        raise AssertionError(
+            f"k_batch=1 engine is not bit-identical to the unbatched "
+            f"engine: dev={dev0:.2e}")
+
+    # --- K>1: host-reference dev gate + amortised throughput --------------
+    for K in (4, 16):
+        randk = build_staleness_randomness(seed, n_events, n, beta,
+                                           k_batch=K)
+        argsk = (jax.random.PRNGKey(seed), randk.gumbels, randk.tau_raw,
+                 randk.leave_at, randk.rejoin_at, jnp.float32(lr))
+        sim = StalenessSimulator(grad_fn=grad_fn, params0=jnp.zeros(d),
+                                 aggregator=ACEIncremental(), n_clients=n,
+                                 server_lr=lr, beta=beta, seed=seed,
+                                 replay=randk, k_batch=K)
+        sim.run(T)
+        wall, resk, compile_s = timed(
+            make_staleness_runner(**kw, k_batch=K), argsk)
+        dev = float(np.max(np.abs(np.asarray(resk[0])
+                                  - np.asarray(sim.w, np.float32))))
+        ev_s[K] = n_events * K / max(wall, 1e-9)
+        rows.append({"bench": "scan_bench", "algo": f"staleness_scan_k{K}",
+                     "events_per_sec": ev_s[K], "wall_s": wall,
+                     "compile_s": compile_s, "k_batch": K, "n_clients": n,
+                     "d": d, "max_dev_vs_host": dev,
+                     "speedup_vs_k1": ev_s[K] / ev_s[1],
+                     "derived": (f"{ev_s[K]:.1f}ev/s_"
+                                 f"{ev_s[K] / ev_s[1]:.1f}x_vs_k1"
+                                 f"_dev={dev:.1e}")})
+        if dev > 1e-5:
+            raise AssertionError(
+                f"k_batch={K} scan deviates from the host K-batch "
+                f"reference: {dev:.2e} > 1e-5")
+    if ev_s[16] < 2.0 * ev_s[1]:
+        raise AssertionError(
+            f"K=16 batching fails the amortisation floor: "
+            f"{ev_s[16]:.1f} ev/s < 2x K=1 ({ev_s[1]:.1f} ev/s)")
+    return rows
+
+
 def _checkify_rows(fast=True):
     """Checkify sanitizer gate (repro/core/sanitize): with the invariant
     checks OFF (the default), the runner must be BIT-identical to a build
@@ -455,13 +536,15 @@ def _checkify_rows(fast=True):
 def main(fast=True, write_json=True):
     rows = (_event_rows(fast) + _staleness_rows(fast) + _rule_rows(fast)
             + _train_scan_rows(fast) + _guard_rows(fast)
-            + _checkify_rows(fast))
+            + _k_batch_rows(fast) + _checkify_rows(fast))
     if write_json:
         payload = {"workloads": {
             "event": "100-client x 500-iter ACE quadratic",
             "staleness": "50-client x 400-iter ACE vision",
             "train_scan": "4-client x 30-iter reduced-yi LM (tree layout)",
             "guards": "100-client x 300-iter ACE quadratic, clean schedule",
+            "k_batch": "100-client x 300-iter ACE quadratic, K in {1,4,16} "
+                       "arrivals per tick (K=1 bit-identical, K>1 vs host)",
             "checkify": "100-client x 300-iter ACE quadratic, sanitizers "
                         "on vs off (off must be bit-identical)"},
             "fast": fast, "backend": jax.default_backend(), "rows": rows}

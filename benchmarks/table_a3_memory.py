@@ -19,6 +19,45 @@ from repro.core.distributed import (afl_state_bytes, history_ring_bytes,
                                     init_afl_state)
 
 
+def _carry_rows():
+    """Guarded + event-batched chunked-carry accounting (ISSUE 9): the
+    fault-guard counter triple and the resync cadence scalar are
+    checkpointed server state riding the chunked carry, and ACED's
+    owner-ring gains a (k_batch,) cohort axis — the exact accounting must
+    cover all three, pinned against a real runner carry."""
+    import jax.random
+
+    from repro.core.aggregators import ACED as ACEDRule
+    from repro.core.scan_staleness import make_chunked_staleness_runner
+
+    n, d, K = 8, 64, 4
+    cfg = AFLConfig(algorithm="aced", n_clients=n, tau_algo=5, k_batch=K)
+    agg = ACEDRule(tau_algo=5, max_cohort=K)
+
+    def grad_fn(p, client, key):
+        g = p + 0.1 * jax.random.normal(key, p.shape)
+        return jnp.sum(jnp.square(p)), g
+
+    runner = make_chunked_staleness_runner(
+        grad_fn=grad_fn, params0=jnp.zeros(d, jnp.float32), aggregator=agg,
+        n_clients=n, T=10, beta=3.0, guards=True, resync_every=8, k_batch=K)
+    carry = runner.init(jax.random.PRNGKey(0), jnp.float32(0.05))
+    measured = (agg.nbytes(carry["state"])
+                + sum(np.asarray(v).nbytes
+                      for v in carry["guards"].values())
+                + np.asarray(carry["n_upd"]).nbytes)
+    analytic = afl_state_bytes(cfg, {"w": jnp.zeros(d)}, "flat",
+                               guards=True, resync_every=8)
+    if measured != analytic:
+        raise AssertionError(
+            f"guarded k-batch carry: analytic accounting drifted from "
+            f"allocation ({analytic} vs {measured})")
+    return [{"bench": "table_a3_memory", "algo": "aced_k4_guarded_carry",
+             "measured_bytes": int(measured),
+             "analytic_bytes": int(analytic),
+             "k_batch": K, "allocation_pinned": True}]
+
+
 def _ring_rows():
     """Model-history ring of the scanned train path (ISSUE 6): the
     (tau_max+1, ·) tree buffer `scan_staleness._staleness_program` carries,
@@ -78,6 +117,9 @@ def main(fast=True):
              # owner-ring; the direct row is the paper's literal accounting
              ("aced_fp32", ACED(), "aced"),
              ("aced_int8", ACED(cache_dtype="int8"), "aced"),
+             # event-batched engine: the owner-ring gains a (k_batch,)
+             # cohort axis for whole-batch expiry (ISSUE 9)
+             ("aced_k4", ACED(max_cohort=4), "aced"),
              ("aced_direct_int8", ACEDDirect(cache_dtype="int8"),
               "aced_direct")]
     params = {"w": jnp.zeros(d)}
@@ -85,7 +127,8 @@ def main(fast=True):
         state = agg.init_state(n, d, None)
         measured = agg.nbytes(state)
         cfg = AFLConfig(algorithm=algo_key, n_clients=n,
-                        cache_dtype=getattr(agg, "cache_dtype", "float32"))
+                        cache_dtype=getattr(agg, "cache_dtype", "float32"),
+                        k_batch=getattr(agg, "max_cohort", 1))
         analytic = afl_state_bytes(cfg, params)
         tree_measured = sum(np.asarray(x).nbytes
                             for x in jax.tree.leaves(init_afl_state(cfg,
@@ -101,6 +144,7 @@ def main(fast=True):
                      "analytic_bytes": int(analytic),
                      "tree_bytes": int(tree_measured),
                      "bytes_per_param": round(measured / d, 3)})
+    rows += _carry_rows()
     rows += _ring_rows()
     return rows
 

@@ -264,6 +264,9 @@ class AFLConfig:
     local_steps: int = 1           # K
     local_lr: float = 0.05
     server_lr: float = 0.1
+    k_batch: int = 1               # arrivals consumed per server tick (the
+    #                                event-batched scan engine); >1 sizes
+    #                                ACED's cohort owner-ring (max_cohort)
     delay_beta: float = 5.0        # exponential mean delay
     delay_kappa: float = 0.0       # per-client speed skew (0 = homogeneous rates)
     max_delay_scale: float = 4.0   # delay-adaptive ASGD threshold multiplier

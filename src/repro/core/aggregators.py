@@ -68,7 +68,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cache import (FlatCache, cache_mean, cache_n, cache_row,
-                              cache_set_row, cache_set_row_delta, cache_sum,
+                              cache_rows, cache_set_row, cache_set_row_delta,
+                              cache_set_rows_delta, cache_sum,
                               init_flat_cache, init_tree_cache)
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
@@ -80,6 +81,21 @@ class Arrival(NamedTuple):
     payload: Any                # gradient-like descent direction: (d,) or pytree
     t: int                      # server iteration counter
     staleness: int              # server iterations since client got its model
+
+
+class ArrivalBatch(NamedTuple):
+    """K simultaneous arrivals consumed by ONE server step (`step_batch`).
+
+    `clients` (K,) int32 must be pairwise distinct among valid lanes (the
+    K-batch engine's Gumbel top-k sampling guarantees it); `payloads` carries
+    a leading (K,) lane axis on every leaf; `valid` (K,) bool masks out lanes
+    quarantined/rejected by the guard pipeline — an invalid lane must be a
+    perfect no-op on the state (its cache row stays bit-exact)."""
+    clients: Any                # (K,) int32
+    payloads: Any               # per-leaf leading (K,) lane axis
+    t: int                      # shared server iteration counter
+    staleness: Any              # (K,) int32
+    valid: Any                  # (K,) bool
 
 
 _TRUE = jnp.ones((), jnp.bool_)
@@ -118,6 +134,24 @@ def _where_sub(a, x, gate):
                                  - x_.astype(jnp.float32),
                                  a_.astype(jnp.float32)).astype(a_.dtype),
         a, x)
+
+
+def _masked_batch_sum(payloads, mask):
+    """Per-leaf ``Σ_{k : mask[k]} p[k]`` over the leading (K,) lane axis, in
+    f32 — the segment-sum reduction folding a K-arrival batch into one
+    running vector. `where`-gated rather than multiply-gated: a quarantined
+    lane's payload may be NaN/inf, and ``NaN · 0`` would poison the sum."""
+    def leaf(p):
+        m = mask.reshape((-1,) + (1,) * (p.ndim - 1))
+        return jnp.sum(jnp.where(m, p.astype(jnp.float32), 0.0), axis=0)
+    return jax.tree.map(leaf, payloads)
+
+
+def _sum_lanes(tree):
+    """Per-leaf f32 sum over the leading (K,) lane axis (unmasked — used on
+    `cache_set_rows_delta` deltas, which already zero invalid lanes)."""
+    return jax.tree.map(lambda x: jnp.sum(x.astype(jnp.float32), axis=0),
+                        tree)
 
 
 def _shard_vec(vec, cache):
@@ -199,6 +233,24 @@ class Aggregator:
             return state, None, float(lr_scale)
         return state, update, float(lr_scale)
 
+    def step_batch(self, state, batch: ArrivalBatch):
+        """K-arrival transition: -> (state, update, emit, lr_scale) — one
+        aggregation and one emission decision for the whole batch. Same
+        trace-safety contract as `step`; invalid lanes must be perfect
+        no-ops. A batch with zero valid lanes must leave `state` unchanged
+        and gate `emit` off. `step` with a singleton batch is the K=1
+        sanity anchor, but the engines never call `step_batch` at K=1 —
+        that path stays on `step` verbatim for bit-identity."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support K-batched arrivals")
+
+    def on_batch(self, state, batch: ArrivalBatch):
+        """Host wrapper over `step_batch` (mirror of `on_arrival`)."""
+        state, update, emit, lr_scale = self.step_batch(state, batch)
+        if not bool(emit):
+            return state, None, float(lr_scale)
+        return state, update, float(lr_scale)
+
     def resync(self, state):
         """Exact self-heal: re-derive every incrementally-maintained running
         aggregate from the authoritative per-client cache. O(n·d) — never on
@@ -226,6 +278,15 @@ class VanillaASGD(Aggregator):
     def step(self, state, arr):
         return state, arr.payload, _TRUE, _ONE
 
+    def step_batch(self, state, batch):
+        # FedAsync's burst rule: average the simultaneously received
+        # contributions into one server step.
+        nv = jnp.sum(batch.valid.astype(jnp.float32))
+        inv = jnp.where(nv > 0, 1.0 / jnp.maximum(nv, 1.0), 0.0)
+        update = jax.tree.map(lambda s_: s_ * inv,
+                              _masked_batch_sum(batch.payloads, batch.valid))
+        return state, update, jnp.any(batch.valid), _ONE
+
 
 @dataclasses.dataclass
 class DelayAdaptiveASGD(Aggregator):
@@ -241,6 +302,23 @@ class DelayAdaptiveASGD(Aggregator):
         scale = jnp.where(tau <= self.tau_c, 1.0,
                           self.tau_c / jnp.maximum(tau, 1.0))
         return state, arr.payload, _TRUE, scale.astype(jnp.float32)
+
+    def step_batch(self, state, batch):
+        # Per-lane staleness discounts fold INTO the averaged update (the
+        # scalar lr_scale can't carry K different weights), so the K-batch
+        # rule returns lr_scale = 1 with s(τ_k)·g_k already applied.
+        tau = jnp.maximum(jnp.asarray(batch.staleness, jnp.float32), 0.0)
+        scale = jnp.where(tau <= self.tau_c, 1.0,
+                          self.tau_c / jnp.maximum(tau, 1.0))
+        scaled = jax.tree.map(
+            lambda p: p.astype(jnp.float32)
+            * scale.reshape((-1,) + (1,) * (p.ndim - 1)),
+            batch.payloads)
+        nv = jnp.sum(batch.valid.astype(jnp.float32))
+        inv = jnp.where(nv > 0, 1.0 / jnp.maximum(nv, 1.0), 0.0)
+        update = jax.tree.map(lambda s_: s_ * inv,
+                              _masked_batch_sum(scaled, batch.valid))
+        return state, update, jnp.any(batch.valid), _ONE
 
 
 @dataclasses.dataclass
@@ -261,6 +339,23 @@ class FedBuff(Aggregator):
         # arithmetic — the scalar reciprocal is zeroed under the gate, so a
         # non-emitting step's "update" is a multiply-by-0, not an O(d) divide
         inv = jnp.where(emit, 1.0 / count.astype(jnp.float32), 0.0)
+        update = jax.tree.map(lambda a: a.astype(jnp.float32) * inv, accum)
+        new_state = {"accum": _gate(emit, jax.tree.map(jnp.zeros_like, accum),
+                                    accum),
+                     "count": jnp.where(emit, 0, count)}
+        return new_state, update, emit, _ONE
+
+    def step_batch(self, state, batch):
+        # The buffer may overshoot `buffer_size` when a batch straddles the
+        # flush boundary; the division by the achieved count keeps the flush
+        # an exact mean of everything buffered (FedBuff with K concurrent
+        # contributions per server step).
+        accum = _acc(state["accum"],
+                     _masked_batch_sum(batch.payloads, batch.valid))
+        count = state["count"] + jnp.sum(batch.valid.astype(jnp.int32))
+        emit = count >= self.buffer_size
+        inv = jnp.where(emit, 1.0 / jnp.maximum(count, 1).astype(jnp.float32),
+                        0.0)
         update = jax.tree.map(lambda a: a.astype(jnp.float32) * inv, accum)
         new_state = {"accum": _gate(emit, jax.tree.map(jnp.zeros_like, accum),
                                     accum),
@@ -308,6 +403,35 @@ class CA2FL(Aggregator):
         # emit-gated O(d) math: scalar reciprocal zeroed under the gate, so
         # buffered arrivals do no division sweep between flushes
         inv = jnp.where(emit, 1.0 / count.astype(jnp.float32), 0.0)
+        gate = emit.astype(jnp.float32)
+        update = jax.tree.map(
+            lambda hb, a: hb.astype(jnp.float32) * gate
+            + a.astype(jnp.float32) * inv,
+            state["h_bar"], accum)
+        inv_n = 1.0 / cache_n(h)
+        h_bar = jax.tree.map(
+            lambda hb, hs: jnp.where(emit, hs.astype(jnp.float32) * inv_n,
+                                     hb.astype(jnp.float32)).astype(hb.dtype),
+            state["h_bar"], h_sum)
+        new_state = {
+            "h": h, "h_bar": h_bar, "h_sum": h_sum,
+            "accum": _gate(emit, jax.tree.map(jnp.zeros_like, accum), accum),
+            "count": jnp.where(emit, 0, count)}
+        return new_state, update, emit, _ONE
+
+    def step_batch(self, state, batch):
+        js = jnp.asarray(batch.clients, jnp.int32)
+        valid = batch.valid
+        h, delta, old = cache_set_rows_delta(state["h"], js, batch.payloads,
+                                             valid)
+        diff = jax.tree.map(lambda g, o: g.astype(jnp.float32) - o,
+                            batch.payloads, old)
+        accum = _acc(state["accum"], _masked_batch_sum(diff, valid))
+        h_sum = _shard_vec(_acc(state["h_sum"], _sum_lanes(delta)), h)
+        count = state["count"] + jnp.sum(valid.astype(jnp.int32))
+        emit = count >= self.buffer_size
+        inv = jnp.where(emit, 1.0 / jnp.maximum(count, 1).astype(jnp.float32),
+                        0.0)
         gate = emit.astype(jnp.float32)
         update = jax.tree.map(
             lambda hb, a: hb.astype(jnp.float32) * gate
@@ -429,6 +553,21 @@ class ACEIncremental(Aggregator):
                 u, new, old)
         return {"cache": cache, "u": u}, u, _TRUE, _ONE
 
+    def step_batch(self, state, batch):
+        # Batched Alg. a.5: u += Σ_k (dq(new_k) − dq(old_k))/n in one O(K·d)
+        # pass. Takes the generic dequantize-subtract path on every layout —
+        # the fused flat-int8 `cache_row_update` kernel is single-row and
+        # stays on the K=1 `step`.
+        js = jnp.asarray(batch.clients, jnp.int32)
+        cache = state["cache"]
+        n = cache_n(cache)
+        cache, delta, _old = cache_set_rows_delta(cache, js, batch.payloads,
+                                                  batch.valid)
+        u = jax.tree.map(
+            lambda u_, d_: (u_.astype(jnp.float32) + d_ / n).astype(u_.dtype),
+            state["u"], _sum_lanes(delta))
+        return {"cache": cache, "u": u}, u, jnp.any(batch.valid), _ONE
+
     def resync(self, state):
         u = _astate(cache_mean(state["cache"]), self.state_dtype)
         return {**state, "u": u}
@@ -453,6 +592,11 @@ class ACED(Aggregator):
         *disowns* its old slot; an availability-window thaw jump retires
         min(Δt, P) slots in one sweep (every live owner is expired once
         Δt ≥ P, and the P visited residues cover the whole ring).
+        With K-batched arrivals (``max_cohort > 1``) a slot owns a whole
+        *cohort* — up to max_cohort clients sharing one t_start — so the
+        ring widens to (P, max_cohort) and every expiry sweep retires the
+        slot's full cohort at once (the K=1 "≤1 expiring owner per slot"
+        assumption would silently drop all but one of them).
       * ``init_sum``/``init_count``/``init_mask`` — the init batch is the one
         case the ring cannot carry (all n clients share t_start = 1): its
         cohort sum is maintained incrementally as members re-arrive and
@@ -466,6 +610,11 @@ class ACED(Aggregator):
     tau_algo: int = 10
     cache_dtype: str = "float32"
     state_dtype: str = "float32"
+    #: owner-ring cohort width: max distinct clients sharing one t_start
+    #: value (= the engine's K). 1 keeps the legacy (P,) ring — and its
+    #: checkpoints/bit-identity — intact; > 1 widens it to (P, max_cohort)
+    #: and routes K=1 steps through the batched transition too.
+    max_cohort: int = 1
     name = "aced"
     cache_init = True
     #: emit = count > 0 looks data-dependent, but emission is in fact
@@ -481,11 +630,13 @@ class ACED(Aggregator):
 
     def init_state(self, n, d, init_grads=None):
         cache = _init_cache(n, d, self.cache_dtype, init_grads)
+        ring_shape = ((self.ring_size,) if self.max_cohort == 1
+                      else (self.ring_size, self.max_cohort))
         # one-time O(n·d) seed of the running active-set sum
         asum = _shard_vec(_astate(cache_sum(cache), self.state_dtype), cache)
         return {"cache": cache,
                 "t_start": jnp.ones((n,), jnp.int32),
-                "ring": jnp.full((self.ring_size,), -1, jnp.int32),
+                "ring": jnp.full(ring_shape, -1, jnp.int32),
                 "asum": asum,
                 "count": jnp.asarray(n, jnp.int32),
                 "t_prev": jnp.zeros((), jnp.int32),
@@ -494,6 +645,15 @@ class ACED(Aggregator):
                 "init_mask": jnp.ones((n,), jnp.bool_)}
 
     def step(self, state, arr):
+        if self.max_cohort > 1:
+            # the (P, max_cohort) ring speaks cohorts — route single
+            # arrivals through the batched transition as a 1-lane batch
+            return self.step_batch(state, ArrivalBatch(
+                clients=jnp.asarray(arr.client, jnp.int32)[None],
+                payloads=jax.tree.map(lambda g: g[None], arr.payload),
+                t=arr.t,
+                staleness=jnp.asarray(arr.staleness, jnp.int32)[None],
+                valid=jnp.ones((1,), jnp.bool_)))
         j = jnp.asarray(arr.client, jnp.int32)
         t = jnp.asarray(arr.t, jnp.int32)
         tau, P = self.tau_algo, self.ring_size
@@ -589,6 +749,107 @@ class ACED(Aggregator):
                      "init_mask": init_mask}
         return new_state, update, count > 0, _ONE
 
+    def step_batch(self, state, batch):
+        """K simultaneous arrivals sharing one t (hence one t_start = t+1
+        cohort). Requires ``max_cohort ≥ K``: the (P, max_cohort) ring row
+        at ``(t+1) mod P`` owns the whole cohort, and every expiry sweep
+        retires a slot's *entire* cohort — fixing the K=1 ring's "≤1
+        expiring owner per slot" assumption, which would silently keep
+        all-but-one expired member in asum/count."""
+        js = jnp.asarray(batch.clients, jnp.int32)
+        K = js.shape[0]
+        if self.max_cohort < max(K, 2):
+            raise ValueError(
+                f"ACED(max_cohort={self.max_cohort}) cannot own a "
+                f"{K}-arrival cohort — construct with max_cohort >= "
+                "max(K, 2) (the cohort ring is (P, max_cohort))")
+        t = jnp.asarray(batch.t, jnp.int32)
+        valid = batch.valid
+        tau, P = self.tau_algo, self.ring_size
+        C = self.max_cohort
+        cache, t_start = state["cache"], state["t_start"]
+        ring, asum, count = state["ring"], state["asum"], state["count"]
+
+        # 1. expiry sweep: visit the min(Δt, P) slots whose t_start fell to
+        # ≤ t−τ−1 and retire each slot's whole surviving cohort (reads are
+        # against the pre-arrival cache; the fori_loop collapses to one
+        # iteration on an ordinary Δt == 1 step).
+        dt = jnp.clip(t - state["t_prev"], 0, P)
+
+        def expire(i, val):
+            asum, count, ring = val
+            s = jnp.mod(t - tau - 1 - i, P)
+            owners = jax.lax.dynamic_index_in_dim(ring, s, keepdims=False)
+            ow = jnp.maximum(owners, 0)
+            gone = jnp.logical_and(owners >= 0, t_start[ow] <= t - tau - 1)
+            dead_sum = _masked_batch_sum(cache_rows(cache, ow), gone)
+            asum = jax.tree.map(
+                lambda a, d_: (a.astype(jnp.float32) - d_).astype(a.dtype),
+                asum, dead_sum)
+            count = count - jnp.sum(gone.astype(jnp.int32))
+            ring = jax.lax.dynamic_update_index_in_dim(
+                ring, jnp.where(gone, -1, owners), s, 0)
+            return asum, count, ring
+
+        asum, count, ring = jax.lax.fori_loop(0, dt, expire,
+                                              (asum, count, ring))
+
+        # 2. init-batch one-shot fire (identical to the K=1 rule)
+        init_sum, init_count = state["init_sum"], state["init_count"]
+        init_mask = state["init_mask"]
+        fire = jnp.logical_and(init_count > 0, t >= tau + 2)
+        count = count - jnp.where(fire, init_count, 0)
+        init_count = jnp.where(fire, 0, init_count)
+        init_mask = jnp.logical_and(init_mask, jnp.logical_not(fire))
+        g_fire = fire.astype(jnp.float32)
+
+        # 3. cohort swap-in: one batched cache write; returning (valid,
+        # not-active) lanes contribute their whole old rows, active lanes
+        # their deltas. Invalid lanes are bit-exact no-ops on the cache and
+        # zero in every sum.
+        old_ts = t_start[js]
+        was_active = old_ts >= t - tau
+        was_init = jnp.logical_and(init_mask[js], valid)
+        cache, delta, old = cache_set_rows_delta(cache, js, batch.payloads,
+                                                 valid)
+        ret = jnp.logical_and(valid, jnp.logical_not(was_active))
+        asum = _shard_vec(jax.tree.map(
+            lambda a, i_, d_, r_: (a.astype(jnp.float32)
+                                   - g_fire * i_.astype(jnp.float32)
+                                   + d_ + r_).astype(a.dtype),
+            asum, init_sum, _sum_lanes(delta), _masked_batch_sum(old, ret)),
+            cache)
+        count = count + jnp.sum(ret.astype(jnp.int32))
+        init_sum = _shard_vec(jax.tree.map(
+            lambda i_, w_: ((1.0 - g_fire) * i_.astype(jnp.float32) - w_
+                            ).astype(i_.dtype),
+            init_sum, _masked_batch_sum(old, was_init)), cache)
+        init_count = init_count - jnp.sum(was_init.astype(jnp.int32))
+        # top-k sampling guarantees pairwise-distinct js, so scatter is safe
+        init_mask = init_mask.at[js].set(
+            jnp.logical_and(init_mask[js], jnp.logical_not(valid)))
+        t_start = t_start.at[js].set(jnp.where(valid, t + 1, old_ts))
+
+        # 4. ring ownership: disown every valid lane's previous slot entry
+        # anywhere in the ring, then claim slot (t+1) mod P with the cohort.
+        # That slot aliases (t−τ−1) mod P, which sweep iteration i=0 just
+        # emptied — live t_start values span [t−τ, t], a width-(τ+1) window
+        # that cannot contain t+1 mod P — so the row overwrite is safe.
+        hit = jnp.any(jnp.logical_and(ring[..., None] == js, valid), axis=-1)
+        ring = jnp.where(hit, -1, ring)
+        cohort = jnp.full((C,), -1, jnp.int32).at[:K].set(
+            jnp.where(valid, js, -1))
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, cohort, jnp.mod(t + 1, P), 0)
+
+        inv = 1.0 / jnp.maximum(count, 1).astype(jnp.float32)
+        update = jax.tree.map(lambda a: a.astype(jnp.float32) * inv, asum)
+        new_state = {"cache": cache, "t_start": t_start, "ring": ring,
+                     "asum": asum, "count": count, "t_prev": t,
+                     "init_sum": init_sum, "init_count": init_count,
+                     "init_mask": init_mask}
+        return new_state, update, count > 0, _ONE
+
     def resync(self, state):
         """Recompute asum/count (and the init-cohort correction state) from
         the cache: the active set after the step at t_prev is exactly
@@ -673,8 +934,11 @@ def make_aggregator(cfg) -> Aggregator:
         return ACEIncremental(cache_dtype=cfg.cache_dtype,
                               state_dtype=cfg.state_dtype)
     if a == "aced":
+        # k_batch>1 sizes the owner-ring for whole-cohort expiry (the
+        # event-batched engine hands ACED up to k_batch arrivals per tick)
         return ACED(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype,
-                    state_dtype=cfg.state_dtype)
+                    state_dtype=cfg.state_dtype,
+                    max_cohort=max(1, getattr(cfg, "k_batch", 1)))
     if a == "aced_direct":
         return ACEDDirect(tau_algo=cfg.tau_algo, cache_dtype=cfg.cache_dtype)
     raise ValueError(f"unknown AFL algorithm {a!r}")

@@ -114,6 +114,57 @@ class FlatCache(NamedTuple):
         new = g.astype(self.data.dtype).astype(jnp.float32)
         return cache, shard(new - old, ("cache_d",)), shard(old, ("cache_d",))
 
+    def rows(self, idx):
+        """Dequantized f32 gather of rows ``idx`` (K,) — the batched read
+        behind the K-arrival engine (ACED cohort expiry, stale ring reads)."""
+        idx = jnp.asarray(idx, jnp.int32)
+        r = jnp.take(self.data, idx, axis=0).astype(jnp.float32)
+        if self.data.dtype == jnp.int8:
+            r = r * jnp.take(self.scale, idx, axis=0)[:, None]
+        return shard(r, (None, "cache_d"))
+
+    def set_rows_delta(self, idx, G, valid=None):
+        """Batched `set_row_delta`: write rows ``idx[k] ← G[k]`` for the
+        lanes where ``valid[k]`` (all lanes when `valid` is None); returns
+        ``(cache', delta (K, d), old (K, d))``. Indices must be pairwise
+        distinct among valid lanes (the K-batch engine's top-k sampling
+        guarantees it). Invalid lanes write back their ORIGINAL stored
+        row/scale bit-exactly (re-quantizing a dequantized row is NOT an
+        identity under int8) and contribute a zero `delta`, so a running
+        sum folding ``Σ_k delta_k`` stays exact under quantization."""
+        idx = jnp.asarray(idx, jnp.int32)
+        K = idx.shape[0]
+        if valid is None:
+            valid = jnp.ones((K,), jnp.bool_)
+        vcol = valid[:, None]
+        if self.data.dtype == jnp.int8:
+            old_q = jnp.take(self.data, idx, axis=0)
+            old_s = jnp.take(self.scale, idx, axis=0)
+            old = old_q.astype(jnp.float32) * old_s[:, None]
+            new_s = jnp.maximum(jnp.max(jnp.abs(G), axis=-1), 1e-12) / INT8_MAX
+            new_q = jnp.clip(jnp.round(G / new_s[:, None]), -127, 127
+                             ).astype(jnp.int8)
+            dq_new = new_q.astype(jnp.float32) * new_s[:, None]
+            delta = jnp.where(vcol, dq_new - old, 0.0)
+            cache = FlatCache(
+                shard(self.data.at[idx].set(jnp.where(vcol, new_q, old_q)),
+                      ("cache_clients", "cache_d")),
+                shard(self.scale.at[idx].set(
+                    jnp.where(valid, new_s.astype(jnp.float32), old_s)),
+                    ("cache_clients",)))
+            return (cache, shard(delta, (None, "cache_d")),
+                    shard(old, (None, "cache_d")))
+        old_raw = jnp.take(self.data, idx, axis=0)
+        old = old_raw.astype(jnp.float32)
+        new_raw = G.astype(self.data.dtype)
+        delta = jnp.where(vcol, new_raw.astype(jnp.float32) - old, 0.0)
+        cache = FlatCache(
+            shard(self.data.at[idx].set(jnp.where(vcol, new_raw, old_raw)),
+                  ("cache_clients", "cache_d")),
+            self.scale)
+        return (cache, shard(delta, (None, "cache_d")),
+                shard(old, (None, "cache_d")))
+
     def dequant(self):
         """(n, d) f32 view."""
         if self.data.dtype == jnp.int8:
@@ -218,6 +269,71 @@ def tree_cache_set_row(cache, i, grads):
                         is_leaf=lambda x: isinstance(x, dict) and "q" in x)
 
 
+def tree_cache_rows(cache, idx):
+    """Batched `tree_cache_row`: dequantized gather of rows ``idx`` (K,) —
+    returns a grads-like pytree with a leading (K,) lane axis per leaf."""
+    idx = jnp.asarray(idx, jnp.int32)
+
+    def leaf(c):
+        r = jnp.take(c["q"], idx, axis=0).astype(jnp.float32)
+        if c["q"].dtype == jnp.int8:
+            s = jnp.take(c["scale"], idx, axis=0)
+            r = r * s.reshape((-1,) + (1,) * (r.ndim - 1))
+        return r
+    return jax.tree.map(leaf, cache, is_leaf=is_tree_cache_leaf)
+
+
+def tree_cache_set_rows_delta(cache, idx, grads,  # tracecheck: ignore[TRC004]
+                              valid=None):
+    # TRC004 suppressed: like init_tree_cache above, per-leaf .at[idx].set
+    # writes inherit each leaf's (data, model) sharding from the enclosing
+    # pjit'd step; only the flat (n, d) layout needs FlatCache's explicit
+    # shard() constraint.
+    """Tree-cache analogue of `FlatCache.set_rows_delta`: `grads` is a
+    grads-like pytree with a leading (K,) lane axis; per-leaf per-lane scalar
+    scales match `tree_cache_set_row` (reduced over every axis but the lane
+    one). Invalid lanes write back their original q/scale bit-exactly and
+    zero their `delta` leaves."""
+    idx = jnp.asarray(idx, jnp.int32)
+    K = idx.shape[0]
+    if valid is None:
+        valid = jnp.ones((K,), jnp.bool_)
+
+    deltas, olds = [], []
+
+    def leaf(c, g):
+        g = g.astype(jnp.float32)
+        vshape = (-1,) + (1,) * (g.ndim - 1)
+        vmask = valid.reshape(vshape)
+        old_raw = jnp.take(c["q"], idx, axis=0)
+        if c["q"].dtype == jnp.int8:
+            old_s = jnp.take(c["scale"], idx, axis=0)
+            old = old_raw.astype(jnp.float32) * old_s.reshape(vshape)
+            ax = tuple(range(1, g.ndim))
+            s = jnp.maximum(jnp.max(jnp.abs(g), axis=ax), 1e-12) / INT8_MAX
+            q = jnp.clip(jnp.round(g / s.reshape(vshape)), -127, 127
+                         ).astype(jnp.int8)
+            dq_new = q.astype(jnp.float32) * s.reshape(vshape)
+            delta = jnp.where(vmask, dq_new - old, 0.0)
+            out = {"q": c["q"].at[idx].set(jnp.where(vmask, q, old_raw)),
+                   "scale": c["scale"].at[idx].set(
+                       jnp.where(valid, s.astype(jnp.float32), old_s))}
+        else:
+            old = old_raw.astype(jnp.float32)
+            new_raw = g.astype(c["q"].dtype)
+            delta = jnp.where(vmask, new_raw.astype(jnp.float32) - old, 0.0)
+            out = {"q": c["q"].at[idx].set(jnp.where(vmask, new_raw,
+                                                     old_raw))}
+        deltas.append(delta)
+        olds.append(old)
+        return out
+
+    new_cache = jax.tree.map(leaf, cache, grads, is_leaf=is_tree_cache_leaf)
+    treedef = jax.tree.structure(grads)
+    return (new_cache, jax.tree.unflatten(treedef, deltas),
+            jax.tree.unflatten(treedef, olds))
+
+
 def tree_cache_set_row_delta(cache, i, grads):
     """Tree-cache analogue of `FlatCache.set_row_delta`: returns
     ``(cache', delta, old)`` with `delta`/`old` grads-like f32 pytrees.
@@ -274,6 +390,15 @@ def cache_row(cache, i):
     return tree_cache_row(cache, i)
 
 
+def cache_rows(cache, idx):
+    """Dequantized f32 gather of rows ``idx`` (K,): a (K, d) array for
+    FlatCache, a grads-like pytree with a leading (K,) lane axis for a tree
+    cache — the batched read behind the K-arrival engine."""
+    if isinstance(cache, FlatCache):
+        return cache.rows(idx)
+    return tree_cache_rows(cache, idx)
+
+
 def cache_set_row(cache, i, g):
     """Write (re-quantizing as needed) row i; returns the same layout."""
     if isinstance(cache, FlatCache):
@@ -290,6 +415,19 @@ def cache_set_row_delta(cache, i, g):
     if isinstance(cache, FlatCache):
         return cache.set_row_delta(i, g)
     return tree_cache_set_row_delta(cache, i, g)
+
+
+def cache_set_rows_delta(cache, idx, G, valid=None):
+    """Batched `cache_set_row_delta`: write rows ``idx[k] ← G[k]`` for the
+    lanes where ``valid[k]`` (`G` carries a leading (K,) lane axis; indices
+    must be pairwise distinct among valid lanes). Returns
+    ``(cache', delta, old)`` with per-lane leading axes; invalid lanes leave
+    their stored row/scale bit-exact and zero their `delta`, so running sums
+    folding ``Σ_k delta_k`` (ACED's asum, CA²FL's h_sum) stay exact under
+    int8 — the K-arrival analogue of the Alg. a.5 invariant."""
+    if isinstance(cache, FlatCache):
+        return cache.set_rows_delta(idx, G, valid)
+    return tree_cache_set_rows_delta(cache, idx, G, valid)
 
 
 def cache_mean(cache, mask=None):

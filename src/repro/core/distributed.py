@@ -114,21 +114,38 @@ def optax_global_norm(tree):
                         for x in jax.tree.leaves(tree)))
 
 
-def afl_state_bytes(cfg: AFLConfig, params, layout: str = "flat") -> int:
+def afl_state_bytes(cfg: AFLConfig, params, layout: str = "flat",
+                    guards: bool = False,
+                    resync_every: int | None = None) -> int:
     """Analytic server-state memory (paper Table a.3) without allocating —
     exact: matches byte-for-byte what the corresponding init actually
-    allocates (pinned per algorithm × cache_dtype by tests/test_distributed).
+    allocates (pinned per algorithm × cache_dtype by tests/test_distributed
+    and benchmarks/table_a3_memory).
 
     layout="flat": `Aggregator.init_state` over the raveled d — a FlatCache
     always carries an (n,) f32 scale row (even for float dtypes), counts are
     int32 scalars, ACED's t_start is (n,) int32, and u/h_bar/accum are f32.
     layout="tree": `init_afl_state` over the params pytree — per-leaf int8
     caches carry one (n,) f32 scale each (float tree caches carry none), and
-    u/h_bar/accum live in cfg.state_dtype."""
+    u/h_bar/accum live in cfg.state_dtype.
+
+    ``cfg.k_batch > 1`` sizes ACED's owner-ring for whole-cohort expiry:
+    (tau_algo+2, k_batch) int32 instead of (tau_algo+2,).
+
+    ``guards=True`` adds the scan's fault-guard counters (the PR-7
+    quarantined/clipped/rejected int32 triple riding the chunked carry —
+    checkpointed server state, so the exact accounting must include it).
+    ``resync_every`` adds the emitted-update int32 scalar the resync
+    cadence is keyed on (likewise checkpointed alongside the rule state)."""
     db = {"float32": 4, "bfloat16": 2, "int8": 1}[cfg.cache_dtype]
     d = sum(int(x.size) for x in jax.tree.leaves(params))
     n = cfg.n_clients
     a = cfg.algorithm
+    extra = 0
+    if guards:
+        extra += 3 * 4        # quarantined / clipped / rejected counters
+    if resync_every:
+        extra += 4            # n_upd cadence scalar (drives lax.cond resync)
     if layout == "flat":
         cache = n * d * db + n * 4            # data + per-row f32 scale
         vec = d * 4                           # u / h_bar / accum are f32
@@ -141,24 +158,26 @@ def afl_state_bytes(cfg: AFLConfig, params, layout: str = "flat") -> int:
         raise ValueError(f"unknown layout {layout!r}")
     count = 4                                 # int32 buffer counter
     if a == "ace":
-        return cache + vec
+        return cache + vec + extra
     if a == "ace_direct":
-        return cache
+        return cache + extra
     if a == "aced":
         # incremental active-set state: t_start (n,) int32, owner-ring
-        # (tau_algo+2,) int32, asum + init_sum running vectors, count/t_prev/
-        # init_count int32 scalars, init_mask (n,) bool
-        return (cache + n * 4 + (cfg.tau_algo + 2) * 4 + 2 * vec
-                + 3 * 4 + n * 1)
+        # (tau_algo+2,) int32 — (tau_algo+2, k_batch) when event-batched —
+        # asum + init_sum running vectors, count/t_prev/init_count int32
+        # scalars, init_mask (n,) bool
+        cohort = max(1, getattr(cfg, "k_batch", 1))
+        return (cache + n * 4 + (cfg.tau_algo + 2) * cohort * 4 + 2 * vec
+                + 3 * 4 + n * 1 + extra)
     if a == "aced_direct":
-        return cache + n * 4                  # t_start (n,) int32
+        return cache + n * 4 + extra          # t_start (n,) int32
     if a == "ca2fl":
-        return cache + 3 * vec + count        # h + h_bar + h_sum + accum
+        return cache + 3 * vec + count + extra  # h + h_bar + h_sum + accum
     if a == "ca2fl_direct":
-        return cache + 2 * vec + count        # h + h_bar + accum + count
+        return cache + 2 * vec + count + extra  # h + h_bar + accum + count
     if a == "fedbuff":
-        return vec + count
-    return 0
+        return vec + count + extra
+    return extra
 
 
 def history_ring_bytes(params, tau_max: int,

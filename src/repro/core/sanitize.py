@@ -105,6 +105,33 @@ def check_aggregator_state(state, n_clients: int) -> None:
                 "checkify: active-set count out of range")
 
 
+def check_batch_arrivals(clients, staleness, valid, n_clients: int,
+                         tau_max: int) -> None:
+    """K-batch arrival invariants (the `ArrivalBatch` contract the batched
+    cache writes rely on): every *valid* lane carries a client index in
+    [0, n), the valid lanes' indices are pairwise distinct (a duplicate
+    would make the batched scatter-write order-dependent and double-count
+    the running-sum deltas), and staleness stays in [0, tau_max]."""
+    checkify = _checkify()
+    js = jnp.asarray(clients, jnp.int32)
+    tau = jnp.asarray(staleness, jnp.int32)
+    v = jnp.asarray(valid)
+    in_range = jnp.logical_or(jnp.logical_not(v),
+                              jnp.logical_and(js >= 0, js < n_clients))
+    checkify.check(jnp.all(in_range),
+                   "checkify: batch arrival client index out of range")
+    eq = js[:, None] == js[None, :]
+    pair = jnp.logical_and(v[:, None], v[None, :])
+    off_diag = jnp.logical_not(jnp.eye(js.shape[0], dtype=bool))
+    dup = jnp.any(jnp.logical_and(off_diag, jnp.logical_and(eq, pair)))
+    checkify.check(jnp.logical_not(dup),
+                   "checkify: duplicate client in arrival batch")
+    tau_ok = jnp.logical_or(jnp.logical_not(v),
+                            jnp.logical_and(tau >= 0, tau <= tau_max))
+    checkify.check(jnp.all(tau_ok),
+                   "checkify: batch arrival staleness out of range")
+
+
 def check_resync_agreement(incremental_state, resynced_state) -> None:
     """At a `resync_every` self-heal point the exact O(n·d) recompute must
     agree with the incrementally-tracked sums (loose f32 tolerance)."""

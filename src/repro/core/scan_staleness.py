@@ -94,9 +94,10 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core import sanitize
-from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
+from repro.core.aggregators import (Aggregator, Arrival, ArrivalBatch,
+                                    wants_cache_init)
 from repro.core.cache import (init_tree_cache, tree_cache_row,
-                              tree_cache_set_row)
+                              tree_cache_rows, tree_cache_set_row)
 from repro.core.scan_engine import (ScanResult, _payload_chain, _to_result,
                                     default_n_events)
 from repro.core.staleness_sim import (FAULT_BYZANTINE, FAULT_EXPLODE,
@@ -112,7 +113,9 @@ class StalenessRandomness:
     does not depend on model values. Consumed identically by the device scan
     and by `StalenessSimulator(..., replay=...)` (seed-matched replay)."""
     gumbels: jnp.ndarray    # (n_events, n) f32 — categorical sampling noise
-    tau_raw: jnp.ndarray    # (n_events,)  f32 — Exp(β) staleness draws, pre-cap
+    tau_raw: jnp.ndarray    # (n_events,) f32 Exp(β) staleness draws, pre-cap
+    #                         ((n_events, k_batch) when built with k_batch > 1
+    #                         — one draw per arrival lane per tick)
     leave_at: jnp.ndarray   # (n,) int32 — iteration each client leaves (NEVER: stays)
     rejoin_at: jnp.ndarray  # (n,) int32 — iteration it comes back (NEVER: permanent)
 
@@ -131,7 +134,8 @@ def build_staleness_randomness(seed: int, n_events: int, n_clients: int,
                                speed_skew: float = 0.0,
                                dropout_at: Optional[int] = None,
                                rejoin_at: Optional[int] = None,
-                               windows=None) -> StalenessRandomness:
+                               windows=None,
+                               k_batch: int = 1) -> StalenessRandomness:
     """Materialise the protocol's random stream from `seed`.
 
     Availability comes from one of (highest precedence first):
@@ -142,11 +146,18 @@ def build_staleness_randomness(seed: int, n_events: int, n_clients: int,
         simulator's `rng.choice(..., p=probs)`; drawn clients leave at
         ``dropout_at`` and rejoin at ``rejoin_at`` (NEVER when omitted —
         the Fig. 3 permanent-dropout scenario);
-      * neither — every client is always on."""
+      * neither — every client is always on.
+
+    ``k_batch > 1`` (the event-batched engine) widens ``tau_raw`` to
+    (n_events, k_batch) — one Exp(β) draw per arrival lane per tick. The
+    gumbel rows stay (n_events, n): top-k of ONE perturbed logit row yields
+    the tick's K distinct clients. ``k_batch=1`` keeps the stream
+    bit-identical to every pre-batching build."""
     root = jax.random.PRNGKey(seed)
     kg, kt, kd = (jax.random.fold_in(root, c) for c in (101, 102, 103))
     gumbels = jax.random.gumbel(kg, (n_events, n_clients), jnp.float32)
-    tau_raw = jax.random.exponential(kt, (n_events,), jnp.float32) * beta
+    tau_shape = ((n_events,) if k_batch == 1 else (n_events, int(k_batch)))
+    tau_raw = jax.random.exponential(kt, tau_shape, jnp.float32) * beta
     if windows is not None:
         leave, rejoin = windows
         leave = jnp.asarray(np.asarray(leave), jnp.int32)
@@ -178,7 +189,10 @@ class FaultSchedule:
     (NONE/NAN/EXPLODE/BYZANTINE/OVERSTALE — see repro/core/staleness_sim.py);
     ``scale[e]`` is the norm multiplier an EXPLODE event applies."""
     kind: jnp.ndarray       # (n_events,) int32 — FAULT_* code per event
+    #                         ((n_events, k_batch) per-lane codes when built
+    #                         for the K-batched engine)
     scale: jnp.ndarray      # (n_events,) f32 — EXPLODE norm multiplier
+    #                         ((n_events, k_batch) with K-batching)
 
     @property
     def n_events(self) -> int:
@@ -193,14 +207,17 @@ class FaultSchedule:
                 "overstale": int((k == FAULT_OVERSTALE).sum())}
 
 
-def no_faults(n_events: int) -> FaultSchedule:
+def no_faults(n_events: int, k_batch: int = 1) -> FaultSchedule:
     """An all-clean schedule — runs the guard pipeline (clipping, natural
-    over-stale rejection) without injected faults."""
-    return FaultSchedule(jnp.zeros((n_events,), jnp.int32),
-                         jnp.ones((n_events,), jnp.float32))
+    over-stale rejection) without injected faults. ``k_batch > 1`` shapes
+    the arrays per-lane for the K-batched engine."""
+    shape = (n_events,) if k_batch == 1 else (n_events, int(k_batch))
+    return FaultSchedule(jnp.zeros(shape, jnp.int32),
+                         jnp.ones(shape, jnp.float32))
 
 
-def build_fault_schedule(seed: int, n_events: int, *, nan_rate: float = 0.0,
+def build_fault_schedule(seed: int, n_events: int, *, k_batch: int = 1,
+                         nan_rate: float = 0.0,
                          explode_rate: float = 0.0,
                          byzantine_rate: float = 0.0,
                          overstale_rate: float = 0.0,
@@ -211,21 +228,23 @@ def build_fault_schedule(seed: int, n_events: int, *, nan_rate: float = 0.0,
     independently becomes one fault kind with the given rate: NAN poisons
     the payload non-finite, EXPLODE multiplies its norm by `explode_scale`,
     BYZANTINE flips its sign, OVERSTALE forces the staleness request past
-    tau_max. Rates must sum to ≤ 1."""
+    tau_max. Rates must sum to ≤ 1. With ``k_batch > 1`` every *lane*
+    draws independently — arrays are (n_events, k_batch), and the guards
+    quarantine lanes individually (a faulty arrival never vetoes its whole
+    batch). ``k_batch=1`` draws are bit-identical to pre-batching builds."""
     rates = (nan_rate, explode_rate, byzantine_rate, overstale_rate)
     if min(rates) < 0 or sum(rates) > 1.0:
         raise ValueError(f"fault rates must be ≥0 and sum to ≤1: {rates}")
+    shape = (n_events,) if k_batch == 1 else (n_events, int(k_batch))
     u = jax.random.uniform(
-        jax.random.fold_in(jax.random.PRNGKey(seed), 201),
-        (n_events,), jnp.float32)
+        jax.random.fold_in(jax.random.PRNGKey(seed), 201), shape, jnp.float32)
     edges = np.concatenate([[0.0], np.cumsum(rates)])
-    kind = jnp.full((n_events,), FAULT_NONE, jnp.int32)
+    kind = jnp.full(shape, FAULT_NONE, jnp.int32)
     for code, lo, hi in zip(
             (FAULT_NAN, FAULT_EXPLODE, FAULT_BYZANTINE, FAULT_OVERSTALE),
             edges[:-1], edges[1:]):
         kind = jnp.where(jnp.logical_and(u >= lo, u < hi), code, kind)
-    return FaultSchedule(kind,
-                         jnp.full((n_events,), explode_scale, jnp.float32))
+    return FaultSchedule(kind, jnp.full(shape, explode_scale, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +328,16 @@ def _tree_global_norm(tree):
                         for x in jax.tree.leaves(tree)))
 
 
+def _tree_lane_norms(tree):
+    """(K,) per-lane ‖·‖₂ over a pytree whose leaves carry a leading (K,)
+    lane axis — the K-batch guard pipeline's per-lane global norm (lane k's
+    value equals `_tree_global_norm` of lane k's slice)."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)),
+                     axis=tuple(range(1, x.ndim)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
 def _tree_payload_chain(grad_fn, local_steps: int, local_lr: float):
     """Tree-layout client payload with the SAME PRNG-split chain as
     `_payload_chain` (one split per call, plus one per local step when
@@ -353,7 +382,8 @@ def _staleness_program(*, grad_fn: Callable, params0,
                        history_dtype: str = "float32",
                        guards: bool = False,
                        resync_every: Optional[int] = None,
-                       checkify_invariants: bool = False):
+                       checkify_invariants: bool = False,
+                       k_batch: int = 1):
     """The protocol as two pure functions: ``(init_fn, chunk_fn, marks)``.
 
     ``init_fn(key, lr) -> carry`` builds the initial scan carry (init-batch
@@ -397,6 +427,22 @@ def _staleness_program(*, grad_fn: Callable, params0,
     the recompute every event)."""
     n = n_clients
     agg = aggregator
+    k_batch = int(k_batch)
+    if not 1 <= k_batch <= n_clients:
+        raise ValueError(
+            f"k_batch={k_batch} must be in [1, n_clients={n_clients}]")
+    if k_batch > 1:
+        # ``k_batch=1`` runs the original per-event step verbatim
+        # (bit-identity contract); K>1 consumes K arrivals per scan tick:
+        # Gumbel top-k sampling, one `ArrivalBatch` into `step_batch`, one
+        # ring append and one model update per tick. ``tau_raw`` (and the
+        # fault arrays under guards) must carry a (K,) lane axis.
+        mc = getattr(agg, "max_cohort", None)
+        if mc is not None and mc < k_batch:
+            raise ValueError(
+                f"{type(agg).__name__}(max_cohort={mc}) cannot own "
+                f"k_batch={k_batch} cohorts — construct the aggregator "
+                "with max_cohort >= k_batch")
     tau_max = tau_max if tau_max is not None else default_tau_max(beta)
     S = tau_max + 1
     wants_init = init_cache_grads and wants_cache_init(agg)
@@ -425,6 +471,13 @@ def _staleness_program(*, grad_fn: Callable, params0,
             jnp.zeros((S, d_tpl), jnp.float32).at[0].set(w0),
             (None, "cache_d"))
         rd_ring, ap_ring = ring_read, ring_append
+
+        def rd_rings(ring, cursor, taus):
+            # batched stale reads: one gather over the (S, d) ring — `taus`
+            # is the (K,) per-lane staleness vector
+            rows = jnp.take(ring, jnp.mod(cursor - taus, S), axis=0)
+            return shard(rows, (None, "cache_d"))
+
         init_snaps = lambda: shard(
             jnp.zeros((marks.shape[0], d_tpl), jnp.float32),
             (None, "cache_d"))
@@ -451,6 +504,12 @@ def _staleness_program(*, grad_fn: Callable, params0,
 
         def rd_ring(ring, cursor, tau):
             return tree_cache_row(ring, jnp.mod(cursor - tau, S))
+
+        def rd_rings(ring, cursor, taus):
+            # batched stale reads off the tree ring: a (K,)-lane dequantized
+            # gather per leaf (int8 rings dequantize per slot exactly like
+            # the single-row read)
+            return tree_cache_rows(ring, jnp.mod(cursor - taus, S))
 
         def ap_ring(ring, cursor, w, emit):
             # same unconditional-write trick as `ring_append`: a non-emitting
@@ -639,9 +698,142 @@ def _staleness_program(*, grad_fn: Callable, params0,
                 sanitize.check_aggregator_state(state, n)
             return new_carry, out
 
+        def step_k(carry, ev):
+            # K-arrival tick: same protocol skeleton as `step`, but the
+            # tick's K sampled clients flow through per-lane guards into ONE
+            # `step_batch` transition — one ring append, one model update.
+            if guards:
+                g_row, traw_k, f_kind, f_scale = ev
+            else:
+                g_row, traw_k = ev
+            g_row = shard(g_row, ("cache_clients",))
+            t = carry["t"]
+            gone = jnp.logical_and(leave_at <= t, t < rejoin_at)
+            logits = jnp.where(gone, -jnp.inf, log_probs)
+            any_alive = jnp.any(~gone)
+            thaw_t = jnp.minimum(
+                jnp.min(jnp.where(gone, rejoin_at, NEVER)), T)
+            # Gumbel top-k: the K distinct clients of this tick, in sampling
+            # order (ties break to the lower index — the host reference
+            # mirrors with a stable argsort of the negated scores). Gone
+            # clients sink to -inf; with fewer than K alive their lanes are
+            # masked off below.
+            _, js = jax.lax.top_k(logits + g_row, k_batch)
+            js = js.astype(jnp.int32)
+            lane_alive = jnp.logical_not(gone[js])
+            tau_req = jnp.floor(traw_k).astype(jnp.int32)      # (K,)
+            if guards:
+                tau_req = jnp.where(f_kind == FAULT_OVERSTALE, tau_max + 1,
+                                    tau_req)
+            taus = jnp.minimum(tau_req,
+                               jnp.minimum(tau_max, carry["n_upd"]))
+            w_stales = rd_rings(carry["ring"], carry["cursor"], taus)
+            # per-lane PRNG: keys[0] advances the carry chain, keys[1+i]
+            # seeds lane i's payload (the host reference splits identically;
+            # payload_fn's own internal splits stay per-lane deterministic)
+            keys = jax.random.split(carry["key"], k_batch + 1)
+            payloads, losses, _ = jax.vmap(payload_fn)(w_stales, js, keys[1:])
+            payloads = pin_payload(payloads)
+            if guards:
+                # the same multiplier chain as `step`, vectorized per lane —
+                # a faulty lane is quarantined/rejected individually and
+                # never vetoes its batch
+                mult = jnp.where(f_kind == FAULT_NAN, jnp.float32(jnp.nan),
+                                 jnp.float32(1.0))
+                mult = mult * jnp.where(f_kind == FAULT_EXPLODE, f_scale,
+                                        jnp.float32(1.0))
+                mult = jnp.where(f_kind == FAULT_BYZANTINE, -mult, mult)
+                payloads = jax.tree.map(
+                    lambda p: p * mult.reshape((-1,) + (1,) * (p.ndim - 1)),
+                    payloads)
+                finite = jnp.ones((k_batch,), jnp.bool_)
+                for leaf in jax.tree.leaves(payloads):
+                    finite = jnp.logical_and(
+                        finite, jnp.all(jnp.isfinite(leaf),
+                                        axis=tuple(range(1, leaf.ndim))))
+                gnorms = _tree_lane_norms(payloads)
+                do_clip = jnp.logical_and(clip_norm > 0, gnorms > clip_norm)
+                cscale = jnp.where(
+                    do_clip, clip_norm / jnp.maximum(gnorms, 1e-12),
+                    jnp.float32(1.0))
+                payloads = jax.tree.map(
+                    lambda p: p * cscale.reshape((-1,) + (1,) * (p.ndim - 1)),
+                    payloads)
+                reject = tau_req > tau_max
+                ok = jnp.logical_and(finite, jnp.logical_not(reject))
+                valid = jnp.logical_and(lane_alive, ok)
+            else:
+                valid = lane_alive
+            # `proc` covers the all-gone freeze too: every lane dead ⇒ no
+            # transition, model/state held, t fast-forwards to the thaw
+            proc = jnp.any(valid)
+            state, u, agg_emit, lr_scale = agg.step_batch(
+                carry["state"], ArrivalBatch(js, payloads, t, taus, valid))
+            emit = jnp.logical_and(agg_emit, jnp.logical_and(t < T, proc))
+            state = _select_tree(proc, state, carry["state"])
+            n_upd_new = carry["n_upd"] + emit.astype(jnp.int32)
+            if resync_every:
+                resync_fn = agg.resync
+                if checkify_invariants:
+                    def resync_fn(s):
+                        s2 = agg.resync(s)
+                        sanitize.check_resync_agreement(s, s2)
+                        return s2
+                state = jax.lax.cond(
+                    jnp.logical_and(emit,
+                                    jnp.mod(n_upd_new, resync_every) == 0),
+                    resync_fn, lambda s: s, state)
+            eta = lr_of_t(t, lr) * lr_scale
+            w = apply_update(carry["w"], u, eta, emit)
+            ring, cursor = ap_ring(carry["ring"], carry["cursor"], w, emit)
+            t_new = jnp.where(any_alive, t + emit.astype(jnp.int32), thaw_t)
+            nv = jnp.sum(valid.astype(jnp.float32))
+            loss = (jnp.sum(jnp.where(valid, losses, 0.0))
+                    / jnp.maximum(nv, 1.0))
+            out = {"loss": loss, "emit": emit, "t": t,
+                   "unorm": unorm(u), "alive": any_alive}
+            if record_w:
+                out["w"] = w
+            new_carry = {"w": w, "key": keys[0], "state": state, "t": t_new,
+                         "n_upd": n_upd_new,
+                         "ring": ring, "cursor": cursor}
+            if marks is not None:
+                new_carry["snaps"], new_carry["hits"] = snap_update(
+                    carry["snaps"], carry["hits"], marks, t_new, emit, w)
+            if guards:
+                # per-tick COUNTS (int32, vs the K=1 booleans): only live
+                # lanes in the live window count, so chunked totals equal
+                # the host loop's per-lane bookkeeping
+                win = jnp.logical_and(t < T, any_alive)
+
+                def cnt(m):
+                    c = jnp.sum(jnp.logical_and(lane_alive, m)
+                                .astype(jnp.int32))
+                    return jnp.where(win, c, 0)
+
+                flags = {"quarantined": cnt(jnp.logical_not(finite)),
+                         "rejected": cnt(jnp.logical_and(finite, reject)),
+                         "clipped": cnt(jnp.logical_and(ok, do_clip))}
+                out.update(flags)
+                new_carry["guards"] = {
+                    k: carry["guards"][k] + flags[k] for k in flags}
+            if checkify_invariants:
+                sanitize.check_model_finite(w)
+                # quarantined lanes legitimately carry NaN — check only the
+                # lanes the batch actually applied
+                applied_lanes = jax.tree.map(
+                    lambda p: jnp.where(
+                        valid.reshape((-1,) + (1,) * (p.ndim - 1)), p, 0.0),
+                    payloads)
+                sanitize.check_payload_finite(applied_lanes, applied=emit)
+                sanitize.check_cursor_bounds(cursor, S)
+                sanitize.check_aggregator_state(state, n)
+                sanitize.check_batch_arrivals(js, taus, valid, n, tau_max)
+            return new_carry, out
+
         xs = ((gumbels, tau_raw, fault_kind, fault_scale) if guards
               else (gumbels, tau_raw))
-        return jax.lax.scan(step, carry, xs)
+        return jax.lax.scan(step if k_batch == 1 else step_k, carry, xs)
 
     if guards:
         def chunk_fn(carry, gumbels, tau_raw, leave_at, rejoin_at, lr,
@@ -672,7 +864,8 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
                           history_dtype: str = "float32",
                           guards: bool = False,
                           resync_every: Optional[int] = None,
-                          checkify_invariants: Optional[bool] = None):
+                          checkify_invariants: Optional[bool] = None,
+                          k_batch: int = 1):
     """Build the jitted runner
     ``run(key, gumbels, tau_raw, leave_at, rejoin_at, lr)
           -> (w, state, outs, extras)``.
@@ -700,7 +893,14 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
     compiles the debug value sanitizers into the step (repro/core/sanitize):
     the returned runner then raises on the first violated invariant and is
     not vmappable (the sweep helpers always build with the flag off). Off
-    (the default) traces no check at all — bit-identical program."""
+    (the default) traces no check at all — bit-identical program.
+
+    ``k_batch > 1`` builds the event-batched engine: every scan tick
+    consumes K arrivals (Gumbel top-k sampling, one `step_batch`
+    aggregation, one ring append + model update), so ``tau_raw`` — and the
+    fault arrays under guards — must carry a trailing (k_batch,) lane axis
+    (`build_staleness_randomness(..., k_batch=...)`). ``k_batch=1``
+    compiles the original per-event program bit-identically."""
     do_checkify = sanitize.enabled(checkify_invariants)
     init_fn, chunk_fn, marks = _staleness_program(
         grad_fn=grad_fn, params0=params0, aggregator=aggregator,
@@ -710,7 +910,7 @@ def make_staleness_runner(*, grad_fn: Callable, params0,
         init_cache_grads=init_cache_grads, record_w=record_w,
         layout=layout, history_dtype=history_dtype,
         guards=guards, resync_every=resync_every,
-        checkify_invariants=do_checkify)
+        checkify_invariants=do_checkify, k_batch=k_batch)
 
     def _run(key, gumbels, tau_raw, leave_at, rejoin_at, lr, *guard_args):
         carry = init_fn(key, lr)
@@ -754,6 +954,10 @@ class ChunkedStalenessRunner:
     #: True when the debug value sanitizers are compiled into `chunk`
     #: (repro/core/sanitize) — chunk then raises on a violated invariant
     checkify_invariants: bool = False
+    #: arrivals consumed per scan tick (1 = the original per-event engine);
+    #: the chunked event slices must carry the matching tau_raw/fault lane
+    #: axis — see `_staleness_program`
+    k_batch: int = 1
 
 
 def make_chunked_staleness_runner(*, mesh=None, **kwargs
@@ -773,6 +977,7 @@ def make_chunked_staleness_runner(*, mesh=None, **kwargs
         tau_max = default_tau_max(kwargs["beta"])
     guards = kwargs.get("guards", False)
     resync_every = kwargs.get("resync_every")
+    k_batch = kwargs.get("k_batch", 1)
     jit_init = jax.jit(init_fn)
     # only `chunk` carries checks (init traces none), so only it needs the
     # checkify functionalization + throw wrapper
@@ -783,7 +988,8 @@ def make_chunked_staleness_runner(*, mesh=None, **kwargs
                                       kwargs.get("layout", "flat"),
                                       guards=guards,
                                       resync_every=resync_every,
-                                      checkify_invariants=do_checkify)
+                                      checkify_invariants=do_checkify,
+                                      k_batch=k_batch)
 
     def init(key, lr):
         with use_rules(mesh):
@@ -796,7 +1002,8 @@ def make_chunked_staleness_runner(*, mesh=None, **kwargs
     return ChunkedStalenessRunner(init, chunk, marks, tau_max,
                                   kwargs.get("layout", "flat"), mesh,
                                   guards=guards, resync_every=resync_every,
-                                  checkify_invariants=do_checkify)
+                                  checkify_invariants=do_checkify,
+                                  k_batch=k_batch)
 
 
 def _window_slack(n_clients: int, rejoin_at, windows) -> int:
@@ -831,7 +1038,8 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        history_dtype: str = "float32",
                        faults: Optional[FaultSchedule] = None,
                        clip_norm: float = 0.0,
-                       resync_every: Optional[int] = None) -> ScanResult:
+                       resync_every: Optional[int] = None,
+                       k_batch: int = 1) -> ScanResult:
     """One device-resident run, trajectory-equivalent to
     ``StalenessSimulator(..., replay=build_staleness_randomness(seed, ...))``
     given the same arguments — including the eval cadence: with `eval_fn` and
@@ -850,14 +1058,23 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
         if n_events is not None and n_events != faults.n_events:
             raise ValueError(
                 f"n_events={n_events} != faults.n_events={faults.n_events}")
+        fault_lanes = (faults.kind.shape[1] if faults.kind.ndim == 2 else 1)
+        if fault_lanes != k_batch:
+            raise ValueError(
+                f"faults built for k_batch={fault_lanes} but the engine "
+                f"runs k_batch={k_batch} — rebuild the schedule with "
+                "build_fault_schedule(..., k_batch=k_batch)")
         n_events = faults.n_events
     if n_events is None:
+        # each tick still emits ≤1 server update, so the K=1 tick budget
+        # remains sufficient for K>1 (a batch never emits more than once)
         n_events = (default_n_events(aggregator, T, init_cache_grads)
                     + _window_slack(n_clients, rejoin_at, windows))
     rand = build_staleness_randomness(seed, n_events, n_clients, beta,
                                       dropout_frac, speed_skew,
                                       dropout_at=dropout_at,
-                                      rejoin_at=rejoin_at, windows=windows)
+                                      rejoin_at=rejoin_at, windows=windows,
+                                      k_batch=k_batch)
     marks = (eval_marks_for(T, eval_every or T)
              if eval_fn is not None else None)
     runner = _make_runner(
@@ -868,11 +1085,11 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
         local_steps=local_steps, local_lr=local_lr,
         init_cache_grads=init_cache_grads, record_w=record_w,
         layout=layout, history_dtype=history_dtype,
-        guards=guards, resync_every=resync_every)
+        guards=guards, resync_every=resync_every, k_batch=k_batch)
     lr = jnp.float32(0.0 if callable(server_lr) else server_lr)
     guard_args = ()
     if guards:
-        fa = faults if faults is not None else no_faults(n_events)
+        fa = faults if faults is not None else no_faults(n_events, k_batch)
         guard_args = (fa.kind, fa.scale, jnp.float32(clip_norm))
     w, _, outs, extras = runner(jax.random.PRNGKey(seed), rand.gumbels,
                                 rand.tau_raw, rand.leave_at, rand.rejoin_at,
@@ -892,14 +1109,16 @@ def run_staleness_scan(*, grad_fn: Callable, params0, aggregator: Aggregator,
 def _staleness_batch(seeds: Sequence[int], *, n_events: int, n_clients: int,
                      beta: float, dropout_frac: float, speed_skew: float,
                      dropout_at: Optional[int] = None,
-                     rejoin_at: Optional[int] = None, windows=None):
+                     rejoin_at: Optional[int] = None, windows=None,
+                     k_batch: int = 1):
     """Stack per-seed randomness and PRNG keys on host (pure precompute)."""
     keys, gum, tau, leave, rejoin = [], [], [], [], []
     for s in seeds:
         r = build_staleness_randomness(s, n_events, n_clients, beta,
                                        dropout_frac, speed_skew,
                                        dropout_at=dropout_at,
-                                       rejoin_at=rejoin_at, windows=windows)
+                                       rejoin_at=rejoin_at, windows=windows,
+                                       k_batch=k_batch)
         keys.append(jax.random.PRNGKey(s))
         gum.append(r.gumbels)
         tau.append(r.tau_raw)
@@ -938,8 +1157,8 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
                         runner=None, mesh=None,
                         fault_rates: Optional[Dict[str, float]] = None,
                         clip_norm: float = 0.0,
-                        resync_every: Optional[int] = None
-                        ) -> List[ScanResult]:
+                        resync_every: Optional[int] = None,
+                        k_batch: int = 1) -> List[ScanResult]:
     """vmap one compiled runner over seeds — the whole batch of staleness
     trajectories is one XLA computation. Pass `runner` (a
     `make_staleness_runner` result with matching statics, including
@@ -958,7 +1177,8 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
     batch = _staleness_batch(seeds, n_events=n_events, n_clients=n_clients,
                              beta=beta, dropout_frac=dropout_frac,
                              speed_skew=speed_skew, dropout_at=dropout_at,
-                             rejoin_at=rejoin_at, windows=windows)
+                             rejoin_at=rejoin_at, windows=windows,
+                             k_batch=k_batch)
     marks = (eval_marks_for(T, eval_every or T)
              if eval_fn is not None else None)
     if runner is None:
@@ -969,7 +1189,7 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
             init_cache_grads=init_cache_grads,
-            guards=guards, resync_every=resync_every,
+            guards=guards, resync_every=resync_every, k_batch=k_batch,
             # vmapped sweeps are never checkified: a batched checkify error
             # can't throw per-lane (use the single/chunked runners to debug)
             checkify_invariants=False)
@@ -979,7 +1199,8 @@ def run_staleness_seeds(*, grad_fn: Callable, params0,
     if guards:
         # per-seed fault schedules: seed s draws its own schedule, so the
         # sweep covers schedule variation exactly like the randomness streams
-        fas = [build_fault_schedule(s, n_events, **(fault_rates or {}))
+        fas = [build_fault_schedule(s, n_events, k_batch=k_batch,
+                                    **(fault_rates or {}))
                for s in seeds]
         guard_batch = (jnp.stack([f.kind for f in fas]),
                        jnp.stack([f.scale for f in fas]),
@@ -1005,8 +1226,8 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
                        runner=None, mesh=None,
                        fault_rates: Optional[Dict[str, float]] = None,
                        clip_norm: float = 0.0,
-                       resync_every: Optional[int] = None
-                       ) -> List[List[ScanResult]]:
+                       resync_every: Optional[int] = None,
+                       k_batch: int = 1) -> List[List[ScanResult]]:
     """The lr-tuning grid × seed sweep as ONE vmapped computation: per-seed
     randomness is tiled across the lr axis (same trajectories, different
     step sizes — exactly the host grid in benchmarks/common.py `tuned`).
@@ -1021,7 +1242,8 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
     batch = _staleness_batch(seeds, n_events=n_events, n_clients=n_clients,
                              beta=beta, dropout_frac=dropout_frac,
                              speed_skew=speed_skew, dropout_at=dropout_at,
-                             rejoin_at=rejoin_at, windows=windows)
+                             rejoin_at=rejoin_at, windows=windows,
+                             k_batch=k_batch)
     marks = (eval_marks_for(T, eval_every or T)
              if eval_fn is not None else None)
     L, ns = len(lrs), len(seeds)
@@ -1032,11 +1254,12 @@ def run_staleness_grid(*, grad_fn: Callable, params0, aggregator: Aggregator,
             tau_max=tau_max, speed_skew=speed_skew, eval_marks=marks,
             local_steps=local_steps, local_lr=local_lr,
             init_cache_grads=init_cache_grads,
-            guards=guards, resync_every=resync_every,
+            guards=guards, resync_every=resync_every, k_batch=k_batch,
             checkify_invariants=False)   # vmapped: see run_staleness_seeds
     guard_batch, g_in, g_out = (), (), ()
     if guards:
-        fas = [build_fault_schedule(s, n_events, **(fault_rates or {}))
+        fas = [build_fault_schedule(s, n_events, k_batch=k_batch,
+                                    **(fault_rates or {}))
                for s in seeds]
         guard_batch = (jnp.stack([f.kind for f in fas]),
                        jnp.stack([f.scale for f in fas]),

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.core.aggregators import Aggregator, Arrival, wants_cache_init
+from repro.core.aggregators import (Aggregator, Arrival, ArrivalBatch,
+                                    wants_cache_init)
 from repro.core.simulator import SimResult
 
 
@@ -72,7 +73,7 @@ class StalenessSimulator:
                  rejoin_at: Optional[int] = None, windows=None,
                  init_cache_grads: bool = True, seed: int = 0, replay=None,
                  faults=None, clip_norm: float = 0.0,
-                 resync_every: Optional[int] = None):
+                 resync_every: Optional[int] = None, k_batch: int = 1):
         """`replay` (duck-typed `StalenessRandomness`: .gumbels (E, n),
         .tau_raw (E,), .leave_at (n,), .rejoin_at (n,)) switches the
         protocol's random draws from this instance's numpy RNG to a
@@ -99,7 +100,18 @@ class StalenessSimulator:
         (and natural draws past tau_max while guards are on) are rejected.
         `resync_every` re-derives the aggregator's incremental running sums
         from its cache every that many emitted updates
-        (`Aggregator.resync`). Counters land on ``SimResult.faults``."""
+        (`Aggregator.resync`). Counters land on ``SimResult.faults``.
+
+        `k_batch > 1` turns this into the host K-batch reference for the
+        scanned engine's event-batched ticks: each tick draws the top-K
+        Gumbel-perturbed clients (the host mirror of `lax.top_k`), computes
+        the K lane payloads from per-lane keys split off the carry chain
+        (`split(key, K+1)`; lane i uses keys[1+i], the carry continues from
+        keys[0]), runs the guard pipeline per lane, and hands the surviving
+        lanes to `Aggregator.on_batch` as one `ArrivalBatch`. Requires
+        `replay` (the Gumbel top-k draw only exists against a
+        pre-materialised stream built with the same `k_batch`); `faults`,
+        when given, must carry per-lane ``(n_events, k_batch)`` schedules."""
         self.grad_fn = grad_fn
         flat, self.unravel = ravel_pytree(params0)
         self.w = np.asarray(flat, np.float32)
@@ -124,6 +136,18 @@ class StalenessSimulator:
         self.faults = faults
         self.clip_norm = float(clip_norm)
         self.resync_every = resync_every
+        self.k_batch = int(k_batch)
+        if not 1 <= self.k_batch <= n_clients:
+            raise ValueError(
+                f"k_batch must be in [1, n_clients]; got {k_batch} with "
+                f"n_clients={n_clients}")
+        if self.k_batch > 1 and replay is None:
+            raise ValueError(
+                "k_batch > 1 requires a replay stream: the host K-batch "
+                "reference mirrors the scanned engine's Gumbel top-k draw, "
+                "which only exists against a pre-materialised "
+                "StalenessRandomness (build_staleness_randomness(..., "
+                "k_batch=k_batch))")
         self.client_probs = staleness_client_probs(n_clients, speed_skew)
         # f32 logits matching the device scan bit-for-bit (argmax ties)
         self._log_probs = np.log(self.client_probs).astype(np.float32)
@@ -137,6 +161,23 @@ class StalenessSimulator:
         loss = 0.0
         for _ in range(self.K):
             self.key, sub = jax.random.split(self.key)
+            loss, g = self.grad_fn(self.unravel(w), client, sub)
+            w = w - self.local_lr * ravel_pytree(g)[0]
+        payload = (jnp.asarray(w_flat) - w) / (self.K * self.local_lr)
+        return np.asarray(payload, np.float32), float(loss)
+
+    def _payload_lane(self, w_flat: np.ndarray, client: int, key):
+        """`_payload` with an explicit per-lane key instead of the carry
+        chain — the host mirror of the scan's vmapped payload_fn, whose
+        internal splits evolve the lane key without touching the carry."""
+        key, sub = jax.random.split(key)
+        if self.K == 1:
+            loss, g = self.grad_fn(self.unravel(jnp.asarray(w_flat)), client, sub)
+            return np.asarray(ravel_pytree(g)[0], np.float32), float(loss)
+        w = jnp.asarray(w_flat)
+        loss = 0.0
+        for _ in range(self.K):
+            key, sub = jax.random.split(key)
             loss, g = self.grad_fn(self.unravel(w), client, sub)
             w = w - self.local_lr * ravel_pytree(g)[0]
         payload = (jnp.asarray(w_flat) - w) / (self.K * self.local_lr)
@@ -173,6 +214,12 @@ class StalenessSimulator:
         if self.faults is not None:
             f_kind = np.asarray(self.faults.kind, np.int64)
             f_scale = np.asarray(self.faults.scale, np.float32)
+            want_ndim = 2 if self.k_batch > 1 else 1
+            if f_kind.ndim != want_ndim:
+                raise ValueError(
+                    f"fault schedule has {f_kind.ndim}-D kinds but "
+                    f"k_batch={self.k_batch}: rebuild with "
+                    f"build_fault_schedule(..., k_batch={self.k_batch})")
         n_quarantined = n_clipped = n_rejected = 0
         n_upd = t                               # emitted-update counter
         # availability windows: client i is unavailable while
@@ -210,7 +257,13 @@ class StalenessSimulator:
                 # fast-forward to the earliest rejoin (exit if none before T).
                 # The scan burns exactly one event for this jump; mirror its
                 # randomness use so the streams stay aligned through the thaw.
-                if replay is not None:
+                if replay is not None and self.k_batch > 1:
+                    # the batched scan computes all K lanes and discards
+                    # them; only the carry key (keys[0] of the K+1 split)
+                    # survives a frozen tick, so that is all we mirror
+                    self.key = jax.random.split(self.key,
+                                                self.k_batch + 1)[0]
+                elif replay is not None:
                     tau_req = int(r_tau_raw[e])
                     if f_kind is not None and f_kind[e] == FAULT_OVERSTALE:
                         tau_req = self.tau_max + 1   # injected request; the
@@ -219,6 +272,96 @@ class StalenessSimulator:
                     self._payload(history[-(tau + 1)], 0)  # key-chain parity
                 e += 1
                 t = int(min(rejoin_at.min(), T))
+                continue
+            if self.k_batch > 1:
+                K = self.k_batch
+                logits = np.where(gone, -np.inf,
+                                  self._log_probs).astype(np.float32)
+                scores = logits + r_gumbels[e]
+                # host mirror of lax.top_k over the perturbed logits: ties
+                # break toward the lower index in both (stable argsort of
+                # the negated scores); gone clients sit at -inf and sink
+                # past every alive lane
+                js = np.argsort(-scores, kind="stable")[:K].astype(np.int64)
+                lane_alive = ~gone[js]
+                tau_raw_row = r_tau_raw[e]              # (K,) per-lane draws
+                ks = jax.random.split(self.key, K + 1)
+                self.key = ks[0]
+                taus = np.zeros(K, np.int64)
+                payload_rows = np.zeros((K, self.d), np.float32)
+                losses = np.zeros(K, np.float32)
+                valid = lane_alive.copy()
+                for kk in range(K):
+                    kind, fscale = FAULT_NONE, np.float32(1.0)
+                    if f_kind is not None and e < f_kind.shape[0]:
+                        kind = int(f_kind[e, kk])
+                        fscale = f_scale[e, kk]
+                    tau_req = int(tau_raw_row[kk])
+                    if kind == FAULT_OVERSTALE:
+                        tau_req = self.tau_max + 1
+                    tau = min(tau_req, self.tau_max, len(history) - 1)
+                    taus[kk] = tau
+                    if not lane_alive[kk]:
+                        continue        # the scan computes and discards
+                    payload, loss = self._payload_lane(
+                        history[-(tau + 1)], int(js[kk]), ks[1 + kk])
+                    total_comms += 1
+                    if guards_on:
+                        mult = np.float32(np.nan) if kind == FAULT_NAN \
+                            else np.float32(1.0)
+                        if kind == FAULT_EXPLODE:
+                            mult = np.float32(mult * fscale)
+                        if kind == FAULT_BYZANTINE:
+                            mult = np.float32(-mult)
+                        payload = payload * mult
+                        if not np.isfinite(payload).all():
+                            n_quarantined += 1
+                            valid[kk] = False
+                        elif tau_req > self.tau_max:
+                            n_rejected += 1
+                            valid[kk] = False
+                        elif self.clip_norm > 0:
+                            gnorm = np.sqrt(np.sum(np.square(payload),
+                                                   dtype=np.float32))
+                            if gnorm > np.float32(self.clip_norm):
+                                payload = payload * (
+                                    np.float32(self.clip_norm)
+                                    / max(gnorm, np.float32(1e-12)))
+                                n_clipped += 1
+                    # invalid lanes keep their (possibly NaN) payload row —
+                    # the aggregator's where-gated masking must ignore it,
+                    # exactly as on device
+                    payload_rows[kk] = payload
+                    losses[kk] = np.float32(loss)
+                e += 1
+                if not valid.any():
+                    continue            # the scan select-gates state back
+                state, update, lr_scale = self.agg.on_batch(
+                    state, ArrivalBatch(
+                        clients=jnp.asarray(js, jnp.int32),
+                        payloads=jnp.asarray(payload_rows),
+                        t=t,
+                        staleness=jnp.asarray(taus, jnp.int32),
+                        valid=jnp.asarray(valid)))
+                if update is not None:
+                    eta = np.float32(self.server_lr(t)) * np.float32(lr_scale)
+                    self.w = self.w - eta * np.asarray(update, np.float32)
+                    history.append(self.w.copy())
+                    res.ts.append(t)
+                    nv = np.float32(valid.sum())
+                    res.losses.append(float(
+                        np.sum(np.where(valid, losses, np.float32(0.0)),
+                               dtype=np.float32) / max(nv, np.float32(1))))
+                    res.update_norms.append(
+                        float(np.linalg.norm(np.asarray(update))))
+                    t += 1
+                    n_upd += 1
+                    if self.resync_every and n_upd % self.resync_every == 0:
+                        state = self.agg.resync(state)
+                    if self.eval_fn and (t % self.eval_every == 0 or t == T):
+                        res.evals.append(
+                            self.eval_fn(self.unravel(jnp.asarray(self.w))))
+                        res.eval_ts.append(t)
                 continue
             if replay is not None:
                 # identical f32 arithmetic to the scanned engine: unnormalised

@@ -63,7 +63,12 @@ def _parser() -> argparse.ArgumentParser:
                     help="scan: chunked device scan (default); host: the "
                     "pinned replay reference loop")
     ap.add_argument("--chunk-events", type=int, default=64,
-                    help="events per scanned chunk (checkpoint granularity)")
+                    help="events per scanned chunk (checkpoint granularity); "
+                    "need not divide the event budget — the final chunk "
+                    "runs partial")
+    ap.add_argument("--k-batch", type=int, default=1,
+                    help="arrivals consumed per server tick (event-batched "
+                    "scan engine; 1 = the bit-pinned per-event path)")
     ap.add_argument("--history-dtype", choices=("float32", "int8"),
                     default="float32",
                     help="model-history ring layout; int8 is ~4x smaller "
@@ -133,7 +138,7 @@ def _run(args) -> float:
                           vocab=args.vocab)
     aflc = afl_config(args.arch, algorithm=args.algo,
                       n_clients=args.n_clients, delay_beta=args.beta,
-                      cache_dtype=args.cache_dtype)
+                      cache_dtype=args.cache_dtype, k_batch=args.k_batch)
     print(f"model={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"algo={args.algo} clients={aflc.n_clients} driver={args.driver}")
 
@@ -156,15 +161,18 @@ def _run(args) -> float:
         drop = args.fault_nan_rate + args.fault_overstale_rate
         n_events = int(np.ceil(n_events / max(1.0 - drop, 0.5))) + 16
     C = max(1, args.chunk_events)
-    n_pad = -(-n_events // C) * C    # chunk multiple; tail events are
-    # harmless padding (emit is gated on t < T, model and state freeze)
-    rand = build_staleness_randomness(args.seed, n_pad, aflc.n_clients,
-                                      args.beta, speed_skew=args.speed_skew)
+    # exact event budget — no rounding up to a chunk multiple: the final
+    # chunk runs partial (one extra compile for its shorter shape), so the
+    # checkpointed event cursor can never claim events past the schedule and
+    # a resume with a different --chunk-events lands on the same stream
+    rand = build_staleness_randomness(args.seed, n_events, aflc.n_clients,
+                                      args.beta, speed_skew=args.speed_skew,
+                                      k_batch=args.k_batch)
     faults = None
     if guards:
         faults = build_fault_schedule(
-            args.seed, n_pad, explode_scale=args.fault_explode_scale,
-            **fault_rates)
+            args.seed, n_events, explode_scale=args.fault_explode_scale,
+            k_batch=args.k_batch, **fault_rates)
         kinds = faults.counts()
         print(f"guards on: clip_norm={args.clip_norm} "
               f"resync_every={args.resync_every or 'off'} "
@@ -177,7 +185,7 @@ def _run(args) -> float:
             n_clients=aflc.n_clients, server_lr=server_lr, beta=args.beta,
             tau_max=tau_max, speed_skew=args.speed_skew, seed=args.seed,
             replay=rand, faults=faults, clip_norm=args.clip_norm,
-            resync_every=resync_every)
+            resync_every=resync_every, k_batch=args.k_batch)
         res = sim.run(T)
         final = float(np.mean(res.losses[-20:]))
         if res.faults:
@@ -192,7 +200,7 @@ def _run(args) -> float:
         server_lr=server_lr, tau_max=tau_max, speed_skew=args.speed_skew,
         layout="tree", history_dtype=args.history_dtype,
         guards=guards, resync_every=resync_every,
-        checkify_invariants=args.checkify or None)
+        checkify_invariants=args.checkify or None, k_batch=args.k_batch)
 
     lr0 = jnp.float32(0.0)   # schedule baked in; runtime lr unused
     carry = runner.init(jax.random.PRNGKey(args.seed), lr0)
@@ -201,13 +209,17 @@ def _run(args) -> float:
         carry, e0 = restore_train_checkpoint(args.ckpt_dir, carry)
         if e0:
             print(f"resumed from event {e0} (t={int(carry['t'])})")
-        e0 = min(e0, n_pad)
+        e0 = min(e0, n_events)
 
     losses: list = []
     t0 = time.time()
     events_done, last_log = 0, 0
-    for lo in range(e0, n_pad, C):
-        hi = lo + C
+    for lo in range(e0, n_events, C):
+        # tail guard: the final chunk is sliced exactly, so the snapshot /
+        # checkpoint cursor `hi` never lands past the event schedule even
+        # when the chunk size does not divide n_events (or a resume starts
+        # mid-chunk after a --chunk-events change)
+        hi = min(lo + C, n_events)
         guard_args = ()
         if guards:
             guard_args = (faults.kind[lo:hi], faults.scale[lo:hi],
@@ -217,16 +229,17 @@ def _run(args) -> float:
                                    rand.rejoin_at, lr0, *guard_args)
         em = np.asarray(outs["emit"])
         losses.extend(np.asarray(outs["loss"])[em].tolist())
-        events_done += C
+        events_done += hi - lo
         t_now = int(carry["t"])
-        if len(losses) - last_log >= args.log_every or hi >= n_pad:
+        if len(losses) - last_log >= args.log_every or hi >= n_events:
             last_log = len(losses)
             dt = time.time() - t0
             print(f"t={t_now:5d}/{T} events={hi} "
                   f"loss={np.mean(losses[-args.log_every:]):.4f} "
-                  f"({events_done/max(dt, 1e-9):.1f} ev/s)", flush=True)
+                  f"({events_done * args.k_batch / max(dt, 1e-9):.1f} ev/s)",
+                  flush=True)
         if args.ckpt_dir and (hi // args.ckpt_every != lo // args.ckpt_every
-                              or hi >= n_pad or t_now >= T):
+                              or hi >= n_events or t_now >= T):
             save_train_checkpoint(args.ckpt_dir, hi, carry)
         if t_now >= T:
             break

@@ -19,3 +19,25 @@ def complete_runner(n_clients, horizon, beta):
         _FULL_CACHE[key] = jax.jit(
             lambda x: x * n_clients + horizon + beta)
     return _FULL_CACHE[key]
+
+
+_K_CACHE = {}
+_K_FULL_CACHE = {}
+
+
+def leaky_k_runner(n_clients, horizon, k_batch=1):
+    # the ISSUE 9 bug shape: a K=1 and a K=16 build trace different scan
+    # bodies, but the key below would hand both the same executable
+    key = (n_clients, horizon)  # EXPECT[TRC005]
+    if key not in _K_CACHE:
+        _K_CACHE[key] = jax.jit(
+            lambda x: x * n_clients + horizon * k_batch)
+    return _K_CACHE[key]
+
+
+def complete_k_runner(n_clients, horizon, k_batch=1):
+    key = (n_clients, horizon, int(k_batch))
+    if key not in _K_FULL_CACHE:
+        _K_FULL_CACHE[key] = jax.jit(
+            lambda x: x * n_clients + horizon * k_batch)
+    return _K_FULL_CACHE[key]

@@ -156,6 +156,47 @@ def test_chunked_off_matches_on_bit_identical(checked_chunked, rand):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_batch_arrival_invariants_trip():
+    """`check_batch_arrivals` (ISSUE 9): the ArrivalBatch contract the
+    batched cache writes rely on — valid-lane indices in range, pairwise
+    distinct, staleness within [0, tau_max] — trips on each violation and
+    stays silent when the offending lane is masked invalid."""
+    k = 3
+
+    def run(js, taus, valid):
+        checked = sanitize.wrap_checked(
+            lambda j, t, v: sanitize.check_batch_arrivals(
+                j, t, v, n_clients=N, tau_max=TAU) or jnp.zeros(()))
+        return checked(jnp.asarray(js, jnp.int32),
+                       jnp.asarray(taus, jnp.int32), jnp.asarray(valid))
+
+    ok = [0, 1, 2], [0, TAU, 1], [True] * k
+    run(*ok)                                         # clean batch passes
+    with pytest.raises(Exception, match="client index out of range"):
+        run([0, N, 2], [0, 0, 0], [True] * k)
+    with pytest.raises(Exception, match="duplicate client"):
+        run([0, 1, 1], [0, 0, 0], [True] * k)
+    with pytest.raises(Exception, match="staleness out of range"):
+        run([0, 1, 2], [0, TAU + 1, 0], [True] * k)
+    # an invalid lane is exempt from every invariant (quarantined lanes
+    # carry whatever garbage the guard pipeline left in them)
+    run([0, N, 0], [0, TAU + 5, 0], [True, False, False])
+
+
+def test_k_batch_checked_clean_run_passes():
+    """A healthy K-batched trajectory passes every compiled invariant —
+    including the per-tick `check_batch_arrivals` the batched step adds."""
+    k = 3
+    kw = _kwargs(aggregator=ALGORITHMS["aced"](tau_algo=TAU, max_cohort=k),
+                 k_batch=k)
+    run = make_staleness_runner(**kw, checkify_invariants=True)
+    assert getattr(run, "checkified", False)
+    randk = build_staleness_randomness(0, N_EV, N, 5.0, k_batch=k)
+    w, _, _, _ = run(jax.random.PRNGKey(0), randk.gumbels, randk.tau_raw,
+                     randk.leave_at, randk.rejoin_at, jnp.float32(0.0))
+    assert np.all(np.isfinite(np.asarray(w)))
+
+
 def test_sweeps_force_checkify_off(monkeypatch):
     """The vmapped sweep helpers must keep working with REPRO_CHECKIFY=1 —
     they always build their runners unchecked (a batched checkify error

@@ -180,6 +180,43 @@ def test_seed_sweep_surfaces_fault_counters():
     assert not np.array_equal(results[0].w, results[1].w)
 
 
+def test_mixed_clean_nan_batch_quarantines_per_lane():
+    """Satellite (ISSUE 9): with K-batched arrivals a NaN lane is
+    quarantined ALONE — its clean batch-mates still apply and the tick
+    still emits. Every tick carries the lane pattern [clean, NaN, clean]:
+    the run must reach T updates (a whole-batch veto would starve it),
+    quarantine exactly one lane per tick, and replay the host ≤1e-5."""
+    from repro.core.scan_staleness import FAULT_NAN, FaultSchedule
+    k = 3
+    grad_fn, params0 = _quad()
+    n_events = _n_events(AGGS["ace"])
+    kind = np.zeros((n_events, k), np.int32)
+    kind[:, 1] = FAULT_NAN
+    fa = FaultSchedule(jnp.asarray(kind),
+                       jnp.ones((n_events, k), jnp.float32))
+    rand = build_staleness_randomness(SEED, n_events, N, BETA, k_batch=k)
+    sim = StalenessSimulator(
+        grad_fn=grad_fn, params0=params0, aggregator=AGGS["ace"](),
+        n_clients=N, server_lr=LR, beta=BETA, seed=SEED, replay=rand,
+        k_batch=k, faults=fa, clip_norm=CLIP)
+    hr = sim.run(T)
+    sr = run_staleness_scan(**_scan_kw("ace", faults=fa, clip_norm=CLIP,
+                                       k_batch=k))
+    assert len(sr.ts) == len(hr.ts) == T - 1    # cache-init consumes
+    assert np.isfinite(sr.w).all()              # iteration 0; every other
+    assert np.max(np.abs(sr.w - np.asarray(sim.w, np.float32))) <= 1e-5
+    assert sr.faults == hr.faults       # tick emitted despite its NaN lane
+    assert sr.faults["quarantined"] == len(sr.ts)   # one lane per tick
+
+
+def test_per_lane_fault_schedule_mismatch_rejected():
+    """A flat (E,) schedule cannot drive the K-batched engine (and vice
+    versa): the lane-count check rejects it before tracing."""
+    fa = _schedule(_n_events(AGGS["asgd"]))
+    with pytest.raises(ValueError, match="k_batch"):
+        run_staleness_scan(**_scan_kw("asgd", faults=fa, k_batch=3))
+
+
 # ---------------------------------------------------------------------------
 # self-healing incremental state
 # ---------------------------------------------------------------------------

@@ -167,3 +167,9 @@ def test_trc005_meta_live_scan_runner_key_is_complete():
         f"parameters {missing} of benchmarks.common._scan_runner never "
         f"reach the _RUNNER_CACHE key — add them (or a derived static) "
         f"to the key tuple")
+    # the event-batched engine's K is a compiled static (K=1 and K=16 trace
+    # different scan bodies): it must exist as a parameter AND feed the key
+    assert "k_batch" in sig.parameters, \
+        "_scan_runner lost its k_batch parameter"
+    assert "k_batch" in fed, \
+        "k_batch no longer reaches the _RUNNER_CACHE key"

@@ -98,13 +98,15 @@ def test_sharded_tree_scan_three_way(algo, device_mesh):
 
 def test_chunked_scan_composes_bit_identically():
     """chunk_fn over consecutive slices == one scan over the concatenation
-    (the carry holds the FULL protocol state), including the harmless
-    past-budget padding tail the train driver rounds up to."""
+    (the carry holds the FULL protocol state), including a PARTIAL final
+    chunk: the train driver no longer pads the event budget up to a chunk
+    multiple, so n_events % chunk_size != 0 is the normal tail case."""
     task = _lm_task()
     agg = AGGS["aced"]()
-    C = 16
-    n_pad = -(-default_n_events(agg, T) // C) * C
-    rand = _rand(agg, n_pad)
+    C = 13
+    n_events = default_n_events(agg, T)
+    assert n_events % C != 0, "pick C so the tail chunk is partial"
+    rand = _rand(agg, n_events)
     kw = dict(grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
               n_clients=N, T=T, beta=BETA, layout="tree")
     one = make_staleness_runner(**kw)
@@ -114,9 +116,10 @@ def test_chunked_scan_composes_bit_identically():
     runner = make_chunked_staleness_runner(**kw)
     carry = runner.init(jax.random.PRNGKey(SEED), jnp.float32(LR))
     losses = []
-    for lo in range(0, n_pad, C):
-        carry, outs = runner.chunk(carry, rand.gumbels[lo:lo + C],
-                                   rand.tau_raw[lo:lo + C], rand.leave_at,
+    for lo in range(0, n_events, C):
+        hi = min(lo + C, n_events)
+        carry, outs = runner.chunk(carry, rand.gumbels[lo:hi],
+                                   rand.tau_raw[lo:hi], rand.leave_at,
                                    rand.rejoin_at, jnp.float32(LR))
         losses.append(np.asarray(outs["loss"]))
     for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(carry["w"])):
@@ -126,17 +129,20 @@ def test_chunked_scan_composes_bit_identically():
 
 
 def test_checkpoint_resume_is_equivalent(tmp_path):
-    """Satellite 1: interrupt at a chunk boundary, round-trip the FULL carry
-    (model, aggregator state, history ring, PRNG key) through
+    """Interrupt at a chunk boundary, round-trip the FULL carry (model,
+    aggregator state, history ring, PRNG key) through
     save/restore_train_checkpoint, finish — final model matches the
-    uninterrupted run ≤1e-5 (f32 npz round-trip: exactly)."""
+    uninterrupted run ≤1e-5 (f32 npz round-trip: exactly). The chunk size
+    does NOT divide the event budget (satellite, ISSUE 9): both the
+    straight and the resumed run end on the driver's partial tail chunk."""
     from repro.checkpoint import (restore_train_checkpoint,
                                   save_train_checkpoint)
     task = _lm_task()
     agg = AGGS["ace"]()
-    C = 16
-    n_pad = -(-default_n_events(agg, T) // C) * C
-    rand = _rand(agg, n_pad)
+    C = 13
+    n_events = default_n_events(agg, T)
+    assert n_events % C != 0, "pick C so the tail chunk is partial"
+    rand = _rand(agg, n_events)
     runner = make_chunked_staleness_runner(
         grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
         n_clients=N, T=T, beta=BETA, layout="tree")
@@ -144,20 +150,22 @@ def test_checkpoint_resume_is_equivalent(tmp_path):
 
     def chunks(carry, lo, hi):
         for o in range(lo, hi, C):
-            carry, _ = runner.chunk(carry, rand.gumbels[o:o + C],
-                                    rand.tau_raw[o:o + C], rand.leave_at,
+            h = min(o + C, hi)
+            carry, _ = runner.chunk(carry, rand.gumbels[o:h],
+                                    rand.tau_raw[o:h], rand.leave_at,
                                     rand.rejoin_at, lr)
         return carry
 
-    straight = chunks(runner.init(jax.random.PRNGKey(SEED), lr), 0, n_pad)
+    straight = chunks(runner.init(jax.random.PRNGKey(SEED), lr),
+                      0, n_events)
 
-    mid = (n_pad // C // 2) * C
+    mid = (n_events // C // 2) * C
     carry = chunks(runner.init(jax.random.PRNGKey(SEED), lr), 0, mid)
     save_train_checkpoint(tmp_path, mid, carry)
     template = runner.init(jax.random.PRNGKey(SEED), lr)   # fresh state
     restored, e0 = restore_train_checkpoint(tmp_path, template)
     assert e0 == mid
-    resumed = chunks(restored, mid, n_pad)
+    resumed = chunks(restored, mid, n_events)
 
     for a, b in zip(jax.tree.leaves(straight), jax.tree.leaves(resumed)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),

@@ -181,13 +181,20 @@ def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
              seeds=(1,), dropout_frac=0.0, dropout_at=None, rejoin_at=None,
              windows=None, speed_skew=0.0, eval_every=None,
              local_steps=1, local_lr=0.05, engine="scan",
-             mesh="auto") -> Dict:
+             mesh="auto", k_batch=1) -> Dict:
     """With `eval_every`, the row carries the accuracy *trajectory*
     ("eval_ts"/"eval_accs") — device-resident on the scan path via the
     in-scan snapshot cadence. `rejoin_at`/`windows` run leave/re-join
     availability scenarios (TimelyFL-style) on either engine. `mesh="auto"`
-    shards the scan whenever >1 device is visible (scan_sharded.py)."""
+    shards the scan whenever >1 device is visible (scan_sharded.py).
+    `k_batch` (scan engine only) consumes K arrivals per tick — the
+    event-batched engine; the runner cache keys on it, so a K-sweep reuses
+    one compiled executable per K."""
     if engine == "host":
+        if k_batch != 1:
+            raise ValueError(
+                "k_batch > 1 needs the scan engine (the host loop's K-batch "
+                "mode is a replay reference, not a sweep driver)")
         return _run_algo_host(task, agg_factory, T=T, beta=beta, lr=lr,
                               seeds=seeds, dropout_frac=dropout_frac,
                               dropout_at=dropout_at, rejoin_at=rejoin_at,
@@ -197,7 +204,7 @@ def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
     marks = eval_marks_for(T, eval_every)
     runner = _scan_runner(task, agg, T=T, beta=beta, speed_skew=speed_skew,
                           local_steps=local_steps, local_lr=local_lr,
-                          eval_marks=marks, mesh=mesh)
+                          eval_marks=marks, mesh=mesh, k_batch=k_batch)
     t0 = time.time()
     results = run_staleness_seeds(
         grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
@@ -205,7 +212,8 @@ def run_algo(task, agg_factory, *, T: int, beta: float, lr: float,
         speed_skew=speed_skew, dropout_frac=dropout_frac,
         dropout_at=dropout_at, rejoin_at=rejoin_at, windows=windows,
         eval_fn=task.eval_fn if marks else None, eval_every=eval_every,
-        local_steps=local_steps, local_lr=local_lr, runner=runner)
+        local_steps=local_steps, local_lr=local_lr, runner=runner,
+        k_batch=k_batch)
     return _summarize(task, results, time.time() - t0, T=T)
 
 
@@ -240,10 +248,11 @@ def _run_algo_host(task, agg_factory, *, T, beta, lr, seeds, dropout_frac,
 
 def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
           protocol="comms", T_iter=None, engine="scan", mesh="auto",
-          **kw) -> Dict:
+          k_batch=1, **kw) -> Dict:
     """Tune c over the grid, report the best final metric. On the scan engine
     the whole grid × seed batch runs as one vmapped XLA computation —
-    sharded over the (data, model) mesh when >1 device is visible."""
+    sharded over the (data, model) mesh when >1 device is visible.
+    `k_batch` selects the event-batched engine exactly as in `run_algo`."""
     T = (comm_budget // M) if protocol == "comms" else (T_iter or comm_budget)
     lrs = [float(c * np.sqrt(n / T)) for c in c_grid]
     if engine == "scan":
@@ -251,7 +260,7 @@ def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
         marks = eval_marks_for(T, kw.get("eval_every"))
         runner = _scan_runner(task, agg, T=T, beta=beta,
                               speed_skew=kw.get("speed_skew", 0.0),
-                              eval_marks=marks, mesh=mesh)
+                              eval_marks=marks, mesh=mesh, k_batch=k_batch)
         t0 = time.time()
         grid = run_staleness_grid(
             grad_fn=task.grad_fn, params0=task.params0, aggregator=agg,
@@ -261,10 +270,12 @@ def tuned(task, name, factory, M, c_grid, *, comm_budget, beta, n, seeds=(1,),
             dropout_at=kw.get("dropout_at"),
             rejoin_at=kw.get("rejoin_at"), windows=kw.get("windows"),
             eval_fn=task.eval_fn if marks else None,
-            eval_every=kw.get("eval_every"), runner=runner)
+            eval_every=kw.get("eval_every"), runner=runner, k_batch=k_batch)
         wall = (time.time() - t0) / len(lrs)
         rows = [_summarize(task, results, wall, T=T) for results in grid]
     else:
+        if k_batch != 1:
+            raise ValueError("k_batch > 1 needs the scan engine")
         rows = [run_algo(task, factory, T=T, beta=beta, lr=lr, seeds=seeds,
                          engine=engine, **kw) for lr in lrs]
     best = None

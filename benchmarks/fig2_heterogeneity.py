@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import algo_suite, run_algo, tuned
+from repro.core.aggregators import ACED, ACEIncremental, CA2FL
 from repro.core.fl_tasks import FLTask, make_vision_task
 from repro.core.scan_engine import sweep
 
@@ -112,8 +113,32 @@ def run_vision(fast=True, protocol="comms"):
     return rows
 
 
+def run_k_batch(fast=True):
+    """k_batch as a benched axis on the fig-2 quadratic testbed (PR 9
+    follow-up): the event-batched scan engine consumes K arrivals per tick
+    through the fused commit path; the floor should be K-invariant (same
+    event stream, same rule algebra) while us_per_iter amortises."""
+    rows = []
+    n, d, T = 40, 30, 300 if fast else 800
+    task = quadratic_task(n=n, d=d, zeta=3.0)
+    for K in (1, 8):
+        for name, factory in (
+                ("ace", lambda: ACEIncremental()),
+                ("aced", lambda K=K: ACED(tau_algo=10,
+                                          max_cohort=max(1, K))),
+                ("ca2fl", lambda: CA2FL(buffer_size=5))):
+            r = run_algo(task, factory, T=T, beta=5.0, lr=0.02,
+                         seeds=(1, 2), k_batch=K)
+            floor = -r["acc_mean"]  # quadratic eval: accuracy = -dist^2
+            rows.append({"bench": "fig2_k_batch", "algo": name,
+                         "k_batch": K, "floor": floor,
+                         "us_per_iter": r["us_per_iter"]})
+    return rows
+
+
 def main(fast=True):
-    rows = run_quadratic(fast) + run_quadratic_scan(fast) + run_vision(fast)
+    rows = (run_quadratic(fast) + run_quadratic_scan(fast) +
+            run_vision(fast) + run_k_batch(fast))
     return rows
 
 

@@ -65,6 +65,20 @@ def main(fast=True):
                      "acc": r["acc_mean"], "eval_ts": r.get("eval_ts"),
                      "eval_accs": r.get("eval_accs"),
                      "us_per_iter": r["us_per_iter"]})
+    # (d) k_batch as a benched axis (PR 9 follow-up): the event-batched
+    # engine under the same dropout scenario — K arrivals per tick through
+    # the fused commit path, one compiled executable per K (the runner
+    # cache keys on k_batch). ACED's owner-ring widens to max_cohort = K.
+    for K in (1, 4):
+        for name, factory in (
+                ("ace", lambda: ACEIncremental()),
+                ("aced", lambda K=K: ACED(tau_algo=10,
+                                          max_cohort=max(1, K)))):
+            r = run_algo(task, factory, T=T, beta=beta, lr=lr, seeds=(1,),
+                         dropout_frac=0.3, dropout_at=T // 2, k_batch=K)
+            rows.append({"bench": "fig3_k_batch", "algo": name,
+                         "k_batch": K, "acc": r["acc_mean"],
+                         "us_per_iter": r["us_per_iter"]})
     return rows
 
 

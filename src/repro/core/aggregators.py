@@ -62,7 +62,7 @@ meaningful — only emitted updates are, and those all precede the stall.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,8 @@ import jax.numpy as jnp
 from repro.core.cache import (FlatCache, cache_mean, cache_n, cache_row,
                               cache_rows, cache_set_row, cache_set_row_delta,
                               cache_set_rows_delta, cache_sum,
-                              init_flat_cache, init_tree_cache)
+                              flat_commit_batch, init_flat_cache,
+                              init_tree_cache)
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
 from repro.sharding.rules import shard
@@ -152,6 +153,18 @@ def _sum_lanes(tree):
     `cache_set_rows_delta` deltas, which already zero invalid lanes)."""
     return jax.tree.map(lambda x: jnp.sum(x.astype(jnp.float32), axis=0),
                         tree)
+
+
+def _fused_flat_commit(flag, cache, vecs) -> bool:
+    """Trace-time gate for the fused K-arrival commit (ISSUE 10): the flat
+    cache layout only (tree layouts keep the dispatch chain), every carried
+    running-sum vector in f32 (the kernel's accumulation dtype — non-f32
+    `state_dtype` builds stay on the chain), and the wiring enabled
+    (`fused_commit` field / REPRO_NO_FUSED_COMMIT env, resolved at trace
+    time by `kernels.backend.fused_commit_enabled`)."""
+    return (isinstance(cache, FlatCache)
+            and all(v.dtype == jnp.float32 for v in vecs)
+            and kernel_ops.fused_commit_enabled(flag))
 
 
 def _shard_vec(vec, cache):
@@ -379,6 +392,9 @@ class CA2FL(Aggregator):
     buffer_size: int = 10
     cache_dtype: str = "float32"
     state_dtype: str = "float32"
+    #: fused K-arrival commit (ISSUE 10): None resolves via
+    #: REPRO_NO_FUSED_COMMIT (default on); False pins the dispatch chain
+    fused_commit: Optional[bool] = None
     name = "ca2fl"
 
     def init_state(self, n, d, init_grads=None):
@@ -422,6 +438,37 @@ class CA2FL(Aggregator):
     def step_batch(self, state, batch):
         js = jnp.asarray(batch.clients, jnp.int32)
         valid = batch.valid
+        vecs = (state["accum"], state["h_sum"], state["h_bar"])
+        if _fused_flat_commit(self.fused_commit, state["h"], vecs):
+            # fused commit, basis [accum, h_sum, h_bar, S_Δ, S_A, S_B, S_G]
+            # with lane_a = lane_g = valid (S_G − S_A = Σ_valid(g − old)):
+            #   accum' = (1−g)·(accum + S_G − S_A)
+            #   h_sum' = h_sum + S_Δ
+            #   h_bar' = g·inv_n·h_sum' + (1−g)·h_bar
+            #   update = g·h_bar + inv·(accum + S_G − S_A)
+            count = state["count"] + jnp.sum(valid.astype(jnp.int32))
+            emit = count >= self.buffer_size
+            g = emit.astype(jnp.float32)
+            inv = jnp.where(emit,
+                            1.0 / jnp.maximum(count, 1).astype(jnp.float32),
+                            0.0)
+            inv_n = 1.0 / cache_n(state["h"])
+            one, zero = jnp.float32(1.0), jnp.float32(0.0)
+            keep = 1.0 - g
+            coef = jnp.stack([
+                jnp.stack([keep, zero, zero, zero, -keep, zero, keep]),
+                jnp.stack([zero, one, zero, one, zero, zero, zero]),
+                jnp.stack([zero, g * inv_n, keep, g * inv_n,
+                           zero, zero, zero])])
+            upd_w = jnp.stack([inv, zero, g, zero, -inv, zero, inv])
+            vf = valid.astype(jnp.float32)
+            h, out, update = flat_commit_batch(
+                state["h"], js, batch.payloads, valid, jnp.stack(vecs),
+                coef, upd_w, lane_a=vf, lane_g=vf)
+            new_state = {"h": h, "h_bar": out[2], "h_sum": out[1],
+                         "accum": out[0],
+                         "count": jnp.where(emit, 0, count)}
+            return new_state, update, emit, _ONE
         h, delta, old = cache_set_rows_delta(state["h"], js, batch.payloads,
                                              valid)
         diff = jax.tree.map(lambda g, o: g.astype(jnp.float32) - o,
@@ -520,6 +567,9 @@ class ACEIncremental(Aggregator):
     generic dequantize-subtract path."""
     cache_dtype: str = "float32"
     state_dtype: str = "float32"
+    #: fused K-arrival commit (ISSUE 10): None resolves via
+    #: REPRO_NO_FUSED_COMMIT (default on); False pins the dispatch chain
+    fused_commit: Optional[bool] = None
     name = "ace"
     cache_init = True
 
@@ -555,12 +605,19 @@ class ACEIncremental(Aggregator):
 
     def step_batch(self, state, batch):
         # Batched Alg. a.5: u += Σ_k (dq(new_k) − dq(old_k))/n in one O(K·d)
-        # pass. Takes the generic dequantize-subtract path on every layout —
-        # the fused flat-int8 `cache_row_update` kernel is single-row and
-        # stays on the K=1 `step`.
+        # pass — the fused commit kernel on the flat layout (basis
+        # [u, S_Δ, ...]: u' = u + S_Δ/n), the generic dequantize-subtract
+        # chain elsewhere. The fused flat-int8 `cache_row_update` kernel is
+        # single-row and stays on the K=1 `step`.
         js = jnp.asarray(batch.clients, jnp.int32)
         cache = state["cache"]
         n = cache_n(cache)
+        if _fused_flat_commit(self.fused_commit, cache, (state["u"],)):
+            coef = jnp.asarray([[1.0, 1.0 / n, 0.0, 0.0, 0.0]], jnp.float32)
+            cache, vecs, u = flat_commit_batch(
+                cache, js, batch.payloads, batch.valid,
+                state["u"][None], coef, coef[0])
+            return {"cache": cache, "u": u}, u, jnp.any(batch.valid), _ONE
         cache, delta, _old = cache_set_rows_delta(cache, js, batch.payloads,
                                                   batch.valid)
         u = jax.tree.map(
@@ -615,6 +672,9 @@ class ACED(Aggregator):
     #: checkpoints/bit-identity — intact; > 1 widens it to (P, max_cohort)
     #: and routes K=1 steps through the batched transition too.
     max_cohort: int = 1
+    #: fused K-arrival commit (ISSUE 10): None resolves via
+    #: REPRO_NO_FUSED_COMMIT (default on); False pins the dispatch chain
+    fused_commit: Optional[bool] = None
     name = "aced"
     cache_init = True
     #: emit = count > 0 looks data-dependent, but emission is in fact
@@ -810,20 +870,44 @@ class ACED(Aggregator):
         old_ts = t_start[js]
         was_active = old_ts >= t - tau
         was_init = jnp.logical_and(init_mask[js], valid)
-        cache, delta, old = cache_set_rows_delta(cache, js, batch.payloads,
-                                                 valid)
         ret = jnp.logical_and(valid, jnp.logical_not(was_active))
-        asum = _shard_vec(jax.tree.map(
-            lambda a, i_, d_, r_: (a.astype(jnp.float32)
-                                   - g_fire * i_.astype(jnp.float32)
-                                   + d_ + r_).astype(a.dtype),
-            asum, init_sum, _sum_lanes(delta), _masked_batch_sum(old, ret)),
-            cache)
-        count = count + jnp.sum(ret.astype(jnp.int32))
-        init_sum = _shard_vec(jax.tree.map(
-            lambda i_, w_: ((1.0 - g_fire) * i_.astype(jnp.float32) - w_
-                            ).astype(i_.dtype),
-            init_sum, _masked_batch_sum(old, was_init)), cache)
+        if _fused_flat_commit(self.fused_commit, cache, (asum, init_sum)):
+            # fused commit (ISSUE 10), basis [asum, init_sum, S_Δ, S_A,
+            # S_B, S_G] with lane_a = ret (a returning lane adds its whole
+            # old row back), lane_b = was_init (an init-cohort member's old
+            # row leaves init_sum):
+            #   asum'     = asum − g_fire·init_sum + S_Δ + S_A
+            #   init_sum' = (1−g_fire)·init_sum − S_B
+            #   update    = inv·(that same asum' row)
+            count = count + jnp.sum(ret.astype(jnp.int32))
+            inv = 1.0 / jnp.maximum(count, 1).astype(jnp.float32)
+            one, zero = jnp.float32(1.0), jnp.float32(0.0)
+            r_asum = jnp.stack([one, -g_fire, one, one, zero, zero])
+            coef = jnp.stack([
+                r_asum,
+                jnp.stack([zero, 1.0 - g_fire, zero, zero, -one, zero])])
+            cache, out, update = flat_commit_batch(
+                cache, js, batch.payloads, valid,
+                jnp.stack((asum, init_sum)), coef, inv * r_asum,
+                lane_a=ret.astype(jnp.float32),
+                lane_b=was_init.astype(jnp.float32))
+            asum, init_sum = out[0], out[1]
+        else:
+            cache, delta, old = cache_set_rows_delta(cache, js,
+                                                     batch.payloads, valid)
+            asum = _shard_vec(jax.tree.map(
+                lambda a, i_, d_, r_: (a.astype(jnp.float32)
+                                       - g_fire * i_.astype(jnp.float32)
+                                       + d_ + r_).astype(a.dtype),
+                asum, init_sum, _sum_lanes(delta),
+                _masked_batch_sum(old, ret)), cache)
+            count = count + jnp.sum(ret.astype(jnp.int32))
+            init_sum = _shard_vec(jax.tree.map(
+                lambda i_, w_: ((1.0 - g_fire) * i_.astype(jnp.float32) - w_
+                                ).astype(i_.dtype),
+                init_sum, _masked_batch_sum(old, was_init)), cache)
+            inv = 1.0 / jnp.maximum(count, 1).astype(jnp.float32)
+            update = jax.tree.map(lambda a: a.astype(jnp.float32) * inv, asum)
         init_count = init_count - jnp.sum(was_init.astype(jnp.int32))
         # top-k sampling guarantees pairwise-distinct js, so scatter is safe
         init_mask = init_mask.at[js].set(
@@ -842,8 +926,6 @@ class ACED(Aggregator):
         ring = jax.lax.dynamic_update_index_in_dim(
             ring, cohort, jnp.mod(t + 1, P), 0)
 
-        inv = 1.0 / jnp.maximum(count, 1).astype(jnp.float32)
-        update = jax.tree.map(lambda a: a.astype(jnp.float32) * inv, asum)
         new_state = {"cache": cache, "t_start": t_start, "ring": ring,
                      "asum": asum, "count": count, "t_prev": t,
                      "init_sum": init_sum, "init_count": init_count,

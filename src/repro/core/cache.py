@@ -199,6 +199,54 @@ def init_flat_cache(n: int, d: int, dtype: str = "float32",
                      jnp.ones((n,), jnp.float32))
 
 
+def flat_commit_batch(cache: FlatCache, idx, G, valid, vecs, coef, upd_w,
+                      lane_a=None, lane_b=None, lane_g=None):
+    """The whole K-arrival commit as ONE fused pass (ISSUE 10): gather the
+    K old rows, requantize+scatter the new ones, fold the masked segment
+    sums into the stacked running-sum vectors ``vecs (R, d)`` via the
+    ``coef (R, R+4)`` recombination and emit the ``upd_w``-weighted model
+    update — `kernels/ops.commit_batch` behind the backend-aware dispatch
+    (Pallas megakernel on TPU, exact XLA oracle elsewhere).
+
+    Returns ``(cache', vecs' (R, d) f32, update (d,) f32)``. The written
+    rows are bit-identical to `FlatCache.set_rows_delta` (valid lanes
+    requantized with the same `row_scale`, invalid lanes bit-exact no-ops);
+    only the running sums differ from the op chain by f32 reassociation
+    (≤1e-5, BENCH-gated). Lane weights must be zero on invalid lanes.
+    Sharding: writes carry the (cache_clients, cache_d) constraints, vector
+    outputs the feature (cache_d) constraint — the TRC004 contract, so the
+    sharded scan consumes this path unchanged."""
+    idx = jnp.asarray(idx, jnp.int32)
+    G = G.astype(jnp.float32)
+    old_rows = jnp.take(cache.data, idx, axis=0)
+    if cache.data.dtype == jnp.int8:
+        old_s = jnp.take(cache.scale, idx, axis=0)
+        # scale the *sanitized* payloads: an invalid lane's NaN must not
+        # poison new_s (its q/scale are never written, but NaN·0 would
+        # taint the kernel's products); valid lanes match set_rows_delta's
+        # scale formula exactly
+        new_s = kernel_ref.row_scale(jnp.where(valid[:, None], G, 0.0))
+        new_rows, vecs_out, update = kernel_ops.commit_batch(
+            G, old_rows, old_s, new_s, valid, vecs, coef, upd_w,
+            lane_a=lane_a, lane_b=lane_b, lane_g=lane_g)
+        new_cache = FlatCache(
+            shard(cache.data.at[idx].set(new_rows),
+                  ("cache_clients", "cache_d")),
+            shard(cache.scale.at[idx].set(
+                jnp.where(valid, new_s.astype(jnp.float32), old_s)),
+                ("cache_clients",)))
+    else:
+        new_rows, vecs_out, update = kernel_ops.commit_batch(
+            G, old_rows, None, None, valid, vecs, coef, upd_w,
+            lane_a=lane_a, lane_b=lane_b, lane_g=lane_g)
+        new_cache = FlatCache(
+            shard(cache.data.at[idx].set(new_rows),
+                  ("cache_clients", "cache_d")),
+            cache.scale)
+    return (new_cache, shard(vecs_out, (None, "cache_d")),
+            shard(update, ("cache_d",)))
+
+
 # ---------------------------------------------------------------------------
 # Tree cache (distributed path): one stacked cache per param leaf.
 # ---------------------------------------------------------------------------

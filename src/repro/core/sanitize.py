@@ -132,6 +132,31 @@ def check_batch_arrivals(clients, staleness, valid, n_clients: int,
                    "checkify: batch arrival staleness out of range")
 
 
+def check_commit_batch(update, state_new, state_old, valid) -> None:
+    """Fused/batched K-arrival commit invariants (ISSUE 10): the emitted
+    server update and every incrementally-maintained running-sum vector
+    stay finite after the commit, and the commit conserves the
+    active-set/buffer count — one batch can grow ``count`` by at most its
+    number of valid lanes (expiry, emit-flush and the init-cohort fire only
+    ever shrink it; a larger jump means a lane was double-counted)."""
+    checkify = _checkify()
+    checkify.check(_finite_pred(update),
+                   "checkify: non-finite commit update")
+    if not isinstance(state_new, dict):
+        return
+    for key in ("u", "asum", "init_sum", "h_sum", "h_bar", "accum"):
+        if key in state_new:
+            checkify.check(
+                _finite_pred(state_new[key]),
+                "checkify: non-finite running sum after commit (" + key + ")")
+    cnt_new = state_new.get("count")
+    cnt_old = state_old.get("count") if isinstance(state_old, dict) else None
+    if cnt_new is not None and cnt_old is not None:
+        nv = jnp.sum(jnp.asarray(valid).astype(jnp.int32))
+        checkify.check(cnt_new - cnt_old <= nv,
+                       "checkify: commit count conservation violated")
+
+
 def check_resync_agreement(incremental_state, resynced_state) -> None:
     """At a `resync_every` self-heal point the exact O(n·d) recompute must
     agree with the incrementally-tracked sums (loose f32 tolerance)."""

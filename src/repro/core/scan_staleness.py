@@ -829,6 +829,7 @@ def _staleness_program(*, grad_fn: Callable, params0,
                 sanitize.check_cursor_bounds(cursor, S)
                 sanitize.check_aggregator_state(state, n)
                 sanitize.check_batch_arrivals(js, taus, valid, n, tau_max)
+                sanitize.check_commit_batch(u, state, carry["state"], valid)
             return new_carry, out
 
         xs = ((gumbels, tau_raw, fault_kind, fault_scale) if guards

@@ -1,8 +1,33 @@
 """Shared backend policy for the Pallas kernels: one place to decide when
-`pallas_call` compiles vs runs in the interpreter."""
+`pallas_call` compiles vs runs in the interpreter, and the runtime escape
+hatches that force the pure-XLA oracle path without editing call sites."""
 from __future__ import annotations
 
+import os
+
 import jax
+
+_TRUTHY = ("1", "true", "on", "yes")
+
+
+def no_pallas() -> bool:
+    """``REPRO_NO_PALLAS=1``: force the XLA oracle path for every kernel
+    dispatch (`ops.default_backend` returns "xla" even on TPU). Read at
+    trace time — set it before building/jitting a runner. An explicit
+    ``backend=`` argument at a call site still overrides it."""
+    return os.environ.get("REPRO_NO_PALLAS", "").strip().lower() in _TRUTHY
+
+
+def fused_commit_enabled(override: bool | None = None) -> bool:
+    """Resolve the fused-commit wiring flag (aggregators' ``fused_commit``
+    field): explicit `override` wins, else on unless ``REPRO_NO_FUSED_COMMIT``
+    is truthy. Off routes `step_batch` through the pinned dispatch-chain
+    reference (`cache_set_rows_delta` + masked segment sums), bit-identical
+    to the pre-fusion build (BENCH-gated at dev == 0.0)."""
+    if override is not None:
+        return bool(override)
+    return os.environ.get("REPRO_NO_FUSED_COMMIT",
+                          "").strip().lower() not in _TRUTHY
 
 
 def default_interpret() -> bool:

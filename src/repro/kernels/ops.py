@@ -10,20 +10,33 @@
 
 The default (`backend=None`) routes to "pallas" on TPU — where the kernels
 actually compile — and "xla" elsewhere, so the scanned ACE/ACED steps get the
-fused kernels exactly when the hardware supports them.
+fused kernels exactly when the hardware supports them. ``REPRO_NO_PALLAS=1``
+(backend.no_pallas, read at trace time) forces "xla" everywhere — the
+runtime escape hatch selecting the oracle path uniformly across every
+kernel without editing call sites; an explicit ``backend=`` still wins.
 """
 from __future__ import annotations
 
 import jax
 
 from repro.kernels import cache_update as _cu
+from repro.kernels import commit_batch as _cb
 from repro.kernels import masked_agg as _ma
 from repro.kernels import quant as _q
 from repro.kernels import ref
 from repro.kernels import row_delta as _rd
+from repro.kernels.backend import fused_commit_enabled, no_pallas
+
+__all__ = [
+    "cache_row_update", "commit_batch", "default_backend",
+    "dequantize_rows", "fused_commit_enabled", "masked_agg", "no_pallas",
+    "quantize_rows", "row_delta",
+]
 
 
 def default_backend() -> str:
+    if no_pallas():
+        return "xla"
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
@@ -67,3 +80,20 @@ def dequantize_rows(q, s, backend=None):
     if backend == "xla":
         return ref.dequantize_rows_ref(q, s)
     return _q.dequantize_rows(q, s, interpret=_interpret(backend))
+
+
+def commit_batch(G, old_rows, old_s, new_s, valid, vecs, coef, upd_w,
+                 lane_a=None, lane_b=None, lane_g=None, backend=None):
+    """Fused K-arrival commit (ISSUE 10): requantize+write the K cache rows,
+    fold the masked segment sums into the running-sum vectors and produce
+    the model update in one pass. See `ref.commit_batch_ref` for the exact
+    semantics; `repro.core.cache.flat_commit_batch` is the cache-level
+    wrapper the aggregators call."""
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.commit_batch_ref(G, old_rows, old_s, new_s, valid, vecs,
+                                    coef, upd_w, lane_a=lane_a, lane_b=lane_b,
+                                    lane_g=lane_g)
+    return _cb.commit_batch(G, old_rows, old_s, new_s, valid, vecs, coef,
+                            upd_w, lane_a=lane_a, lane_b=lane_b,
+                            lane_g=lane_g, interpret=_interpret(backend))

@@ -6,6 +6,7 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.cache_update import cache_row_update
+from repro.kernels.commit_batch import commit_batch
 from repro.kernels.masked_agg import masked_agg
 from repro.kernels.quant import dequantize_rows, quantize_rows
 from repro.kernels.row_delta import row_delta
@@ -77,6 +78,81 @@ def test_row_delta_matches_ref(d, blk):
         np.asarray(d2),
         np.asarray(q2.astype(jnp.float32) * nsc - crow.astype(jnp.float32)
                    * osc), rtol=1e-6, atol=1e-6)
+
+
+def commit_inputs(seed, K, d, R, quantized, lanes, valid=None):
+    """Random inputs for the fused K-arrival commit, in the aggregator
+    calling convention: lane weights are zero on invalid lanes and `new_s`
+    scales the sanitized payloads (NaN-free), exactly as
+    `repro.core.cache.flat_commit_batch` prepares them."""
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(rng.normal(size=(K, d)) * 3, jnp.float32)
+    if valid is None:
+        valid = rng.random(K) < 0.8
+    valid = jnp.asarray(valid, bool)
+    rows_f = jnp.asarray(rng.normal(size=(K, d)), jnp.float32)
+    if quantized:
+        old_rows, old_s = ref.quantize_rows_ref(rows_f)
+        new_s = ref.row_scale(jnp.where(valid[:, None], G, 0.0))
+    else:
+        old_rows, old_s, new_s = rows_f, None, None
+    vf = valid.astype(jnp.float32)
+    kw = dict(G=G, old_rows=old_rows, old_s=old_s, new_s=new_s, valid=valid,
+              vecs=jnp.asarray(rng.normal(size=(R, d)), jnp.float32),
+              coef=jnp.asarray(rng.normal(size=(R, R + 4)), jnp.float32),
+              upd_w=jnp.asarray(rng.normal(size=(R + 4,)), jnp.float32))
+    for name in lanes:
+        kw[f"lane_{name}"] = jnp.asarray(rng.random(K), jnp.float32) * vf
+    return kw
+
+
+@pytest.mark.parametrize("K,d,blk,quantized,R,lanes", [
+    (1, 257, 128, True, 1, ()),                    # K=1, non-dividing tile
+    (4, 1000, 512, True, 2, ("a", "b")),           # ACED lane shape
+    (16, 2048, 1024, False, 3, ("a", "g")),        # float cache
+    (3, 129, 128, True, 3, ("a", "b", "g")),       # every lane weight
+])
+def test_commit_batch_matches_ref(K, d, blk, quantized, R, lanes):
+    kw = commit_inputs(7 * K + d, K, d, R, quantized, lanes)
+    rows1, vecs1, upd1 = commit_batch(**kw, block_d=blk, interpret=True)
+    rows2, vecs2, upd2 = ref.commit_batch_ref(**kw)
+    assert jnp.array_equal(rows1, rows2)           # cache rows bit-exact
+    np.testing.assert_allclose(np.asarray(vecs1), np.asarray(vecs2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(upd1), np.asarray(upd2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_commit_batch_invalid_lanes_are_noops():
+    """Invalid lanes keep their stored rows bit-exact even when the payload
+    is NaN-poisoned, and the sums/update stay finite (the guard-quarantine
+    contract the scan engines rely on)."""
+    valid = np.array([True, False, True, False])
+    kw = commit_inputs(11, 4, 300, 2, True, ("a",), valid=valid)
+    G = np.asarray(kw["G"]).copy()
+    G[~valid] = np.nan
+    kw["G"] = jnp.asarray(G)
+    kw["new_s"] = ref.row_scale(jnp.where(kw["valid"][:, None], kw["G"], 0.0))
+    rows, vecs, upd = commit_batch(**kw, block_d=128, interpret=True)
+    assert jnp.array_equal(rows[~valid], kw["old_rows"][~valid])
+    assert np.isfinite(np.asarray(vecs)).all()
+    assert np.isfinite(np.asarray(upd)).all()
+    rows2, vecs2, upd2 = ref.commit_batch_ref(**kw)
+    assert jnp.array_equal(rows, rows2)
+    np.testing.assert_allclose(np.asarray(vecs), np.asarray(vecs2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_commit_batch_all_masked_batch():
+    """An all-invalid batch is a perfect no-op on the cache and reduces the
+    output to the pure affine recombination of the running-sum vectors."""
+    kw = commit_inputs(13, 4, 200, 2, True, ("a", "b"),
+                       valid=np.zeros(4, bool))
+    rows, vecs, upd = commit_batch(**kw, block_d=128, interpret=True)
+    assert jnp.array_equal(rows, kw["old_rows"])
+    expect = np.asarray(kw["coef"])[:, :2] @ np.asarray(kw["vecs"])
+    np.testing.assert_allclose(np.asarray(vecs), expect,
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_ops_dispatch_xla_equals_interpret():

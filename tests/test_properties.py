@@ -317,3 +317,54 @@ def test_aggregator_step_tree_matches_flat_on_ravel(algo, n, M, steps, seed):
         np.testing.assert_allclose(float(sc_tree), float(sc_flat),
                                    rtol=1e-6, atol=0)
         t += int(np.asarray(e_flat))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12),                       # K
+       st.integers(1, 400),                      # d (non-dividing tiles)
+       st.booleans(),                            # quantized cache
+       st.integers(1, 3),                        # R running-sum vectors
+       st.integers(0, 7),                        # lane_a/b/g presence bits
+       st.sampled_from([128, 256]),              # block_d
+       st.sampled_from(["dense", "zero", "tiny", "huge", "allmask"]))
+def test_commit_batch_fused_matches_oracle(K, d, quantized, R, lanes, blk,
+                                           mode):
+    """ISSUE 10 differential: the Pallas fused-commit kernel (interpret
+    mode) vs the exact XLA oracle over random shapes/dtypes, non-dividing
+    feature tiles, K=1, all-masked batches, zero payload rows and int8
+    scale edges (tiny rows hit the 1e-12 row_scale clamp, huge rows the
+    f32 range). Cache rows must be BIT-equal; sums/update ≤1e-5 relative."""
+    from repro.kernels.commit_batch import commit_batch
+
+    rng = np.random.default_rng(K * 7919 + d * 13 + lanes)
+    scale = {"dense": 3.0, "zero": 0.0, "tiny": 1e-30, "huge": 1e30}
+    G = jnp.asarray(rng.normal(size=(K, d)) * scale.get(mode, 1.0),
+                    jnp.float32)
+    valid = (np.zeros(K, bool) if mode == "allmask"
+             else rng.random(K) < 0.75)
+    valid = jnp.asarray(valid)
+    if bool(np.any(~np.asarray(valid))):         # NaN-poison invalid lanes
+        Gn = np.asarray(G).copy()
+        Gn[~np.asarray(valid)] = np.nan
+        G = jnp.asarray(Gn)
+    rows_f = jnp.asarray(rng.normal(size=(K, d)), jnp.float32)
+    if quantized:
+        old_rows, old_s = ref.quantize_rows_ref(rows_f)
+        new_s = ref.row_scale(jnp.where(valid[:, None], G, 0.0))
+    else:
+        old_rows, old_s, new_s = rows_f, None, None
+    vf = valid.astype(jnp.float32)
+    kw = dict(G=G, old_rows=old_rows, old_s=old_s, new_s=new_s, valid=valid,
+              vecs=jnp.asarray(rng.normal(size=(R, d)), jnp.float32),
+              coef=jnp.asarray(rng.normal(size=(R, R + 4)), jnp.float32),
+              upd_w=jnp.asarray(rng.normal(size=(R + 4,)), jnp.float32))
+    for i, name in enumerate("abg"):
+        if lanes & (1 << i):
+            kw[f"lane_{name}"] = jnp.asarray(rng.random(K), jnp.float32) * vf
+    rows1, vecs1, upd1 = commit_batch(**kw, block_d=blk, interpret=True)
+    rows2, vecs2, upd2 = ref.commit_batch_ref(**kw)
+    assert jnp.array_equal(rows1, rows2)
+    tol = 1e-5 * (1.0 + float(np.max(np.abs(np.asarray(vecs2)))))
+    assert np.max(np.abs(np.asarray(vecs1) - np.asarray(vecs2))) <= tol
+    tol_u = 1e-5 * (1.0 + float(np.max(np.abs(np.asarray(upd2)))))
+    assert np.max(np.abs(np.asarray(upd1) - np.asarray(upd2))) <= tol_u
